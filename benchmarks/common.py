@@ -1,0 +1,109 @@
+"""Shared harness for the paper-replication benchmarks.
+
+The image datasets of the paper (SVHN/CIFAR-10/CINIC-10) are not available
+offline; the benchmarks run the same protocol (m=100 clients, Dirichlet(0.1)
+non-IID split, Eq.-9 heterogeneous p_i, 5 local steps, decaying LR) on the
+synthetic 10-class Gaussian task from ``repro.data.synthetic`` with a 2-layer
+MLP. Scale knobs (--rounds, --clients) trade fidelity for CPU time.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import FederationConfig
+from repro.core import (
+    build_base_probs,
+    init_fed_state,
+    make_algorithm,
+    make_link_process,
+    make_round_fn,
+)
+from repro.data import (
+    dirichlet_partition,
+    federated_classification_batches,
+    make_classification_data,
+)
+from repro.optim import paper_decay, sgd
+
+ALGOS = ["fedpbc", "fedavg", "fedavg_all", "fedau", "f3ast",
+         "fedavg_known_p", "mifa"]
+
+SCHEMES = {
+    "bernoulli_ti": dict(scheme="bernoulli", time_varying=False),
+    "bernoulli_tv": dict(scheme="bernoulli", time_varying=True),
+    "markov_hom": dict(scheme="markov", time_varying=False),
+    "markov_nonhom": dict(scheme="markov", time_varying=True),
+    "cyclic": dict(scheme="cyclic", cyclic_reset=False),
+    "cyclic_reset": dict(scheme="cyclic", cyclic_reset=True),
+}
+
+
+def mlp_init(key, dim=32, classes=10, hidden=64):
+    k1, k2 = jax.random.split(key)
+    return {
+        "w1": jax.random.normal(k1, (dim, hidden)) * dim ** -0.5,
+        "b1": jnp.zeros(hidden),
+        "w2": jax.random.normal(k2, (hidden, classes)) * hidden ** -0.5,
+        "b2": jnp.zeros(classes),
+    }
+
+
+def mlp_loss(params, batch):
+    h = jax.nn.relu(batch["x"] @ params["w1"] + params["b1"])
+    logits = h @ params["w2"] + params["b2"]
+    labels = jax.nn.one_hot(batch["y"], logits.shape[-1])
+    return -jnp.mean(jnp.sum(labels * jax.nn.log_softmax(logits), -1))
+
+
+def accuracy(params, x, y):
+    h = jax.nn.relu(x @ params["w1"] + params["b1"])
+    logits = h @ params["w2"] + params["b2"]
+    return float((jnp.argmax(logits, -1) == y).mean())
+
+
+def run_training(algo_name, scheme_key, *, rounds=300, m=100, seed=0,
+                 alpha=0.1, sigma0=10.0, delta=0.02, gamma=0.5,
+                 eval_every=25):
+    """One federated run; returns (test-acc trajectory, train-acc final)."""
+    skw = dict(SCHEMES[scheme_key])
+    rng = np.random.default_rng(seed)
+    x_all, y_all = make_classification_data(seed, dim=32, n_per_class=600, sep=3.0)
+    n_train = 5000
+    x, y = x_all[:n_train], y_all[:n_train]
+    xt, yt = x_all[n_train:], y_all[n_train:]
+    idx, _ = dirichlet_partition(rng, y, m, alpha=alpha, per_client=64)
+    fed = FederationConfig(algorithm=algo_name, num_clients=m, local_steps=5,
+                           gamma=gamma, delta=delta, sigma0=sigma0,
+                           alpha=alpha, **skw)
+    p, _, _ = build_base_probs(jax.random.PRNGKey(seed), m, 10, alpha=alpha,
+                               sigma0=sigma0, delta=delta)
+    algo = make_algorithm(fed)
+    link = make_link_process(p, fed)
+    opt = sgd(paper_decay(0.1))
+    rf = jax.jit(make_round_fn(mlp_loss, opt, algo, link, fed))
+    params = mlp_init(jax.random.PRNGKey(seed + 1))
+    st = init_fed_state(jax.random.PRNGKey(seed + 2), params, fed, algo, link, opt)
+    xt_j, yt_j = jnp.asarray(xt), jnp.asarray(yt)
+    x_j, y_j = jnp.asarray(x), jnp.asarray(y)
+    traj = []
+    for t in range(rounds):
+        b = federated_classification_batches(rng, x, y, idx,
+                                             local_steps=5, batch_size=32)
+        st, _ = rf(st, {"x": jnp.asarray(b["x"]), "y": jnp.asarray(b["y"])})
+        if (t + 1) % eval_every == 0 or t == rounds - 1:
+            traj.append((t + 1, accuracy(st.server, xt_j, yt_j)))
+    train_acc = accuracy(st.server, x_j, y_j)
+    return traj, train_acc
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.elapsed = time.perf_counter() - self.t0

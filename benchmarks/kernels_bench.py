@@ -1,0 +1,68 @@
+"""Kernel micro-benchmarks: pure-jnp reference timings on CPU (the Pallas
+kernels are TPU-target; interpret-mode timing is not meaningful, so we time
+the jnp oracles and report kernel/oracle allclose deltas)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.ops import (
+    flash_attention,
+    flash_attention_ref,
+    masked_agg,
+    masked_agg_ref,
+    rwkv6_chunk,
+    rwkv6_chunk_ref,
+)
+
+
+def _time(fn, *args, reps=5):
+    fn(*args)  # warmup/compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run(csv=True):
+    key = jax.random.PRNGKey(0)
+    rows = []
+
+    x = jax.random.normal(key, (64, 1 << 16))
+    mask = (jax.random.uniform(jax.random.fold_in(key, 1), (64,)) < 0.5)
+    us = _time(jax.jit(masked_agg_ref), x, mask)
+    err = float(jnp.max(jnp.abs(masked_agg(x, mask) - masked_agg_ref(x, mask))))
+    rows.append(("masked_agg_64x65536", us, f"kernel_max_err={err:.2e}"))
+
+    q, k, v = (jax.random.normal(jax.random.fold_in(key, i), (1, 4, 512, 64))
+               for i in range(3))
+    us = _time(jax.jit(flash_attention_ref), q, k, v)
+    err = float(jnp.max(jnp.abs(flash_attention(q, k, v)
+                                - flash_attention_ref(q, k, v))))
+    rows.append(("flash_attention_512", us, f"kernel_max_err={err:.2e}"))
+
+    b, h, t, d = 1, 4, 256, 64
+    r_, k_, v_ = (0.5 * jax.random.normal(jax.random.fold_in(key, 10 + i),
+                                          (b, h, t, d)) for i in range(3))
+    w = jnp.exp(-jnp.exp(-3.0 + 0.3 * jax.random.normal(
+        jax.random.fold_in(key, 13), (b, h, t, d))))
+    u = 0.2 * jax.random.normal(jax.random.fold_in(key, 14), (h, d))
+    s0 = jnp.zeros((b, h, d, d))
+    us = _time(jax.jit(rwkv6_chunk_ref), r_, k_, v_, w, u, s0)
+    o1, _ = rwkv6_chunk(r_, k_, v_, w, u, s0)
+    o2, _ = rwkv6_chunk_ref(r_, k_, v_, w, u, s0)
+    err = float(jnp.max(jnp.abs(o1 - o2)))
+    rows.append(("rwkv6_chunk_256", us, f"kernel_max_err={err:.2e}"))
+
+    if csv:
+        print("kernels,name,us_per_call,derived")
+        for n, us, d_ in rows:
+            print(f"kernels,{n},{us:.1f},{d_}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,35 @@
+"""Roofline table: reads the dry-run artifact (experiments/dryrun_all.json)
+and prints the per-(arch x shape x mesh) roofline terms."""
+from __future__ import annotations
+
+import json
+import os
+
+DEFAULT = "experiments/dryrun_all.json"
+
+
+def run(csv=True, path=DEFAULT):
+    if not os.path.exists(path):
+        print(f"# roofline: {path} not found — run "
+              "`python -m repro.launch.dryrun --all --both-meshes --out "
+              f"{path}` first")
+        return []
+    rows = json.load(open(path))
+    if csv:
+        print("roofline,arch,shape,mesh,status,t_compute_s,t_memory_s,"
+              "t_collective_s,bottleneck,useful_fraction,temp_GB_per_dev")
+    for r in rows:
+        if r["status"] != "ok":
+            print(f"roofline,{r['arch']},{r['shape']},{r.get('mesh','')},"
+                  f"{r['status']},,,,,,")
+            continue
+        print(f"roofline,{r['arch']},{r['shape']},{r['mesh']},ok,"
+              f"{r['t_compute_s']:.4f},{r['t_memory_s']:.4f},"
+              f"{r['t_collective_s']:.4f},{r['bottleneck']},"
+              f"{r['useful_fraction']:.3f},"
+              f"{(r.get('temp_bytes_per_device') or 0)/1e9:.1f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,50 @@
+"""Benchmark driver — one module per paper table/figure. Prints CSV.
+
+  python -m benchmarks.run              # default (CPU-budget) suite
+  python -m benchmarks.run --only fig3
+  python -m benchmarks.run --rounds 400 # longer federated runs
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="fig2|fig3|table1|table2|fig8|roofline|kernels")
+    ap.add_argument("--rounds", type=int, default=250)
+    args = ap.parse_args()
+
+    from benchmarks import (
+        extensions,
+        fig2_bias,
+        fig3_quadratic,
+        fig8_ablations,
+        kernels_bench,
+        roofline,
+        table1_accuracy,
+        table2_rounds_to_target,
+    )
+
+    suites = {
+        "fig2": lambda: fig2_bias.run(),
+        "fig3": lambda: fig3_quadratic.run(rounds=min(args.rounds * 2, 800)),
+        "table1": lambda: table1_accuracy.run(rounds=args.rounds),
+        "table2": lambda: table2_rounds_to_target.run(rounds=args.rounds),
+        "fig8": lambda: fig8_ablations.run(rounds=max(args.rounds // 2, 100)),
+        "extensions": lambda: extensions.run(rounds=args.rounds),
+        "roofline": lambda: roofline.run(),
+        "kernels": lambda: kernels_bench.run(),
+    }
+    names = [args.only] if args.only else list(suites)
+    for name in names:
+        t0 = time.time()
+        print(f"# === {name} ===", flush=True)
+        suites[name]()
+        print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Table 1: final train/test accuracy of all 7 algorithms under the six
+unreliable-uplink schemes (synthetic stand-in dataset; see common.py).
+
+Default: 2 schemes x 7 algos x 1 seed at 250 rounds (CPU budget);
+--full runs all 6 schemes x 3 seeds."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import ALGOS, SCHEMES, run_training
+
+
+def run(csv=True, *, schemes=("bernoulli_ti", "bernoulli_tv"),
+        algos=ALGOS, rounds=250, m=100, seeds=(0,)):
+    if csv:
+        print("table1,scheme,algo,test_acc_mean,test_acc_std,train_acc")
+    results = {}
+    for scheme in schemes:
+        for algo in algos:
+            accs, tr = [], []
+            for sd in seeds:
+                traj, train_acc = run_training(algo, scheme, rounds=rounds,
+                                               m=m, seed=sd)
+                accs.append(np.mean([a for _, a in traj[-3:]]))
+                tr.append(train_acc)
+            results[(scheme, algo)] = (float(np.mean(accs)), float(np.std(accs)))
+            if csv:
+                print(f"table1,{scheme},{algo},{np.mean(accs):.4f},"
+                      f"{np.std(accs):.4f},{np.mean(tr):.4f}", flush=True)
+    return results
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--rounds", type=int, default=250)
+    a = ap.parse_args()
+    if a.full:
+        run(schemes=tuple(SCHEMES), rounds=max(a.rounds, 400), seeds=(0, 1, 2))
+    else:
+        run(rounds=a.rounds)

@@ -1,0 +1,34 @@
+"""Table 2: first round to reach 1/4, 1/2, 3/4, 1 of the best test accuracy
+under Bernoulli time-varying links."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import ALGOS, run_training
+
+
+def run(csv=True, *, rounds=300, m=100, algos=ALGOS, seed=0):
+    trajs = {}
+    for algo in algos:
+        traj, _ = run_training(algo, "bernoulli_tv", rounds=rounds, m=m,
+                               seed=seed, eval_every=10)
+        trajs[algo] = traj
+    best = max(a for tr in trajs.values() for _, a in tr)
+    targets = [best * f for f in (0.25, 0.5, 0.75, 1.0)]
+    if csv:
+        print("table2,algo,q25_round,q50_round,q75_round,q100_round,best_acc")
+    out = {}
+    for algo, tr in trajs.items():
+        firsts = []
+        for tgt in targets:
+            hit = next((r for r, a in tr if a >= tgt - 1e-9), None)
+            firsts.append(hit if hit is not None else -1)
+        out[algo] = firsts
+        if csv:
+            print(f"table2,{algo},{firsts[0]},{firsts[1]},{firsts[2]},"
+                  f"{firsts[3]},{best:.4f}", flush=True)
+    return out
+
+
+if __name__ == "__main__":
+    run()

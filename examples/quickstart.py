@@ -1,0 +1,49 @@
+"""Quickstart: the paper's Fig.-3 quadratic counterexample in ~40 lines.
+
+Two client populations with very different uplink probabilities (0.9 vs 0.1).
+FedAvg converges to a biased point (Prop. 1); FedPBC's postponed broadcast
+(implicit gossiping) removes the bias.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs import FederationConfig
+from repro.core import init_fed_state, make_algorithm, make_link_process, make_round_fn
+from repro.core.bias import fedavg_fixed_point
+from repro.optim import sgd
+
+M, D, S, ROUNDS, ETA = 20, 16, 10, 400, 2e-3
+
+key = jax.random.PRNGKey(0)
+u = (jnp.arange(M) / M)[:, None] + 0.1 * jax.random.normal(key, (M, D))
+x_star = u.mean(0)                                  # the true optimum
+p = jnp.where(jnp.arange(M) < M // 2, 0.9, 0.1)     # heterogeneous uplinks
+
+
+def run(algorithm: str) -> float:
+    fed = FederationConfig(algorithm=algorithm, num_clients=M, local_steps=S)
+    algo = make_algorithm(fed)
+    link = make_link_process(p, fed)
+    loss = lambda params, batch: 0.5 * jnp.sum((params["x"] - batch["u"]) ** 2)
+    opt = sgd(ETA)
+    round_fn = jax.jit(make_round_fn(loss, opt, algo, link, fed))
+    state = init_fed_state(jax.random.PRNGKey(1), {"x": jnp.zeros(D)},
+                           fed, algo, link, opt)
+    batches = {"u": jnp.broadcast_to(u[:, None], (M, S, D))}
+    for _ in range(ROUNDS):
+        state, _ = round_fn(state, batches)
+    return float(jnp.linalg.norm(state.server["x"] - x_star))
+
+
+if __name__ == "__main__":
+    import numpy as np
+    err_avg = run("fedavg")
+    err_pbc = run("fedpbc")
+    predicted_bias = float(np.linalg.norm(
+        fedavg_fixed_point(np.asarray(p), np.asarray(u)) - np.asarray(x_star)))
+    print(f"||x - x*||  FedAvg : {err_avg:.4f}   (Eq.-3 predicted bias "
+          f"{predicted_bias:.4f})")
+    print(f"||x - x*||  FedPBC : {err_pbc:.4f}   <- implicit gossiping wins")
+    assert err_pbc < 0.5 * err_avg

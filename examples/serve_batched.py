@@ -1,0 +1,9 @@
+"""Batched serving example: greedy decoding with per-family caches
+(KV ring buffers for SWA archs, RWKV/SSM states for recurrent ones).
+
+  PYTHONPATH=src python examples/serve_batched.py --arch rwkv6-3b --gen 24
+"""
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""End-to-end driver: federated training of a transformer LM with FedPBC
+under unreliable uplinks — data pipeline, round engine, checkpointing.
+
+Thin wrapper over the production launcher so the example stays honest:
+
+  PYTHONPATH=src python examples/train_federated_lm.py \
+      --arch smollm-135m --rounds 100 --clients 8 --scheme markov
+"""
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    main()

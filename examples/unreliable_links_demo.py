@@ -1,0 +1,39 @@
+"""Fig. 5/6 analogue: ASCII traces of the six unreliable-uplink schemes.
+
+  PYTHONPATH=src python examples/unreliable_links_demo.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import FederationConfig
+from repro.core import make_link_process
+
+SCHEMES = [
+    ("bernoulli, time-invariant", dict(scheme="bernoulli")),
+    ("bernoulli, time-varying", dict(scheme="bernoulli", time_varying=True)),
+    ("markov, homogeneous", dict(scheme="markov")),
+    ("markov, non-homogeneous", dict(scheme="markov", time_varying=True)),
+    ("cyclic, no reset", dict(scheme="cyclic", cyclic_length=40)),
+    ("cyclic, periodic reset", dict(scheme="cyclic", cyclic_length=40,
+                                    cyclic_reset=True)),
+]
+
+P = jnp.asarray([0.05, 0.1, 0.5, 0.9])
+T = 80
+
+if __name__ == "__main__":
+    for name, kw in SCHEMES:
+        fed = FederationConfig(num_clients=len(P), **kw)
+        link = make_link_process(P, fed)
+        state = link.init(jax.random.PRNGKey(0))
+        key = jax.random.PRNGKey(1)
+        rows = [[] for _ in P]
+        for t in range(T):
+            key, k = jax.random.split(key)
+            active, p_t, state = link.sample(state, jnp.int32(t), k)
+            for i, a in enumerate(np.asarray(active)):
+                rows[i].append("#" if a else ".")
+        print(f"\n== {name} ==")
+        for i, r in enumerate(rows):
+            print(f"  p={float(P[i]):4.2f} |{''.join(r)}|")

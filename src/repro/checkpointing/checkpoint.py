@@ -1,0 +1,44 @@
+"""Pytree checkpointing: npz blobs + structure metadata; atomic writes."""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+def save(path: str, step: int, tree) -> str:
+    os.makedirs(path, exist_ok=True)
+    leaves, treedef = _flatten(tree)
+    fname = os.path.join(path, f"ckpt_{step:08d}.npz")
+    tmp = tempfile.NamedTemporaryFile(dir=path, delete=False, suffix=".tmp")
+    np.savez(tmp, treedef=json.dumps(str(treedef)),
+             **{f"leaf_{i}": np.asarray(l) for i, l in enumerate(leaves)})
+    tmp.close()
+    os.replace(tmp.name, fname)
+    return fname
+
+
+def latest_step(path: str):
+    if not os.path.isdir(path):
+        return None
+    steps = [int(f[5:13]) for f in os.listdir(path)
+             if f.startswith("ckpt_") and f.endswith(".npz")]
+    return max(steps) if steps else None
+
+
+def restore(path: str, step: int, template):
+    """Restore into the structure of ``template`` (shapes must match)."""
+    data = np.load(os.path.join(path, f"ckpt_{step:08d}.npz"))
+    leaves, treedef = _flatten(template)
+    new = [data[f"leaf_{i}"] for i in range(len(leaves))]
+    for old, loaded in zip(leaves, new):
+        assert np.shape(old) == loaded.shape, (np.shape(old), loaded.shape)
+    return jax.tree.unflatten(treedef, new)

@@ -1,0 +1,19 @@
+"""Llama-3.2-Vision 90B — dense GQA with cross-attention image layers
+[hf:meta-llama/Llama-3.2-11B-Vision]. Vision encoder is a stub: input_specs
+provides precomputed patch embeddings (per the assignment carve-out)."""
+from repro.configs.base import AttentionConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama-3.2-vision-90b",
+    family="vlm",
+    num_layers=100,
+    d_model=8192,
+    d_ff=28672,
+    vocab_size=128256,
+    attention=AttentionConfig(
+        num_heads=64, num_kv_heads=8, head_dim=128, pattern="full", rope_theta=500000.0
+    ),
+    cross_attn_every=5,       # every 5th layer cross-attends to image tokens
+    num_image_tokens=1024,    # stubbed ViT patch embeddings
+    source="hf:meta-llama/Llama-3.2-11B-Vision (scaled to 90B layout)",
+)

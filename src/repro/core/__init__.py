@@ -1,0 +1,24 @@
+"""FedPBC core: the paper's primary contribution in JAX."""
+from repro.core.algorithms import ALGORITHMS, Algorithm, make_algorithm, masked_mean
+from repro.core.connectivity import (
+    LinkProcess,
+    build_base_probs,
+    make_link_process,
+    p_of_t,
+)
+from repro.core.federated import FedState, init_fed_state, local_steps, make_round_fn
+
+__all__ = [
+    "ALGORITHMS",
+    "Algorithm",
+    "make_algorithm",
+    "masked_mean",
+    "LinkProcess",
+    "build_base_probs",
+    "make_link_process",
+    "p_of_t",
+    "FedState",
+    "init_fed_state",
+    "local_steps",
+    "make_round_fn",
+]

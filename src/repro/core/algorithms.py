@@ -1,0 +1,311 @@
+"""Federated aggregation algorithms over arbitrary parameter pytrees.
+
+Every algorithm is expressed through two pure functions acting on a
+``FedState`` whose client-indexed leaves carry a leading ``[m, ...]`` axis:
+
+- ``client_start(algo_state, server, clients) -> [m, ...] start params``
+  (what each client trains from this round);
+- ``aggregate(algo_state, server, clients, x_star, active, p_t, t)
+  -> (algo_state, server', clients')`` (server update + postponed/instant
+  broadcast semantics).
+
+FedPBC (the paper, Alg. 1): clients always start from their *own* model
+(implicit gossiping); the server averages the active clients' models and
+broadcasts the average back **only to the active clients** — the postponed
+broadcast. The resulting mixing matrix is Eq. (4).
+
+Baselines: FedAvg, FedAvg-all, FedAU, MIFA, FedAvg-known-p, F3AST
+(§7.2, "Baseline algorithms").
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FederationConfig
+
+Pytree = Any
+
+
+def _bmask(mask, leaf):
+    """Broadcast [m] mask against an [m, ...] leaf."""
+    return mask.reshape(mask.shape + (1,) * (leaf.ndim - 1)).astype(leaf.dtype)
+
+
+def masked_mean(xs: Pytree, active) -> Pytree:
+    """Mean over the client axis restricted to active clients.
+
+    = (1/|A|) sum_{i in A} x_i ; falls back to 0 when A is empty (callers
+    guard with ``any_active``). This is the paper's server aggregation and
+    the op kernelized in ``repro.kernels.masked_agg``.
+    """
+    denom = jnp.maximum(active.sum().astype(jnp.float32), 1.0)
+    return jax.tree.map(
+        lambda x: (x * _bmask(active, x)).sum(0) / denom.astype(x.dtype), xs)
+
+
+def weighted_sum(xs: Pytree, w) -> Pytree:
+    return jax.tree.map(lambda x: (x * _bmask(w, x)).sum(0), xs)
+
+
+def bcast_where(active, new: Pytree, old: Pytree) -> Pytree:
+    """Per-client select: active clients receive ``new``, others keep ``old``."""
+    return jax.tree.map(
+        lambda n, o: jnp.where(_bmask(active, o) > 0, jnp.broadcast_to(n, o.shape), o),
+        new, old)
+
+
+@dataclass(frozen=True)
+class Algorithm:
+    name: str
+    init: Callable[[Pytree, int], Pytree]
+    client_start: Callable[..., Pytree]
+    aggregate: Callable[..., tuple]
+    needs_p: bool = False
+
+
+def _tile(server: Pytree, m: int) -> Pytree:
+    return jax.tree.map(lambda x: jnp.broadcast_to(x, (m,) + x.shape).copy(), server)
+
+
+# ---------------------------------------------------------------------------
+# FedPBC — the paper's algorithm
+# ---------------------------------------------------------------------------
+
+
+def fedpbc() -> Algorithm:
+    def init(server, m):
+        return ()
+
+    def client_start(algo, server, clients):
+        return clients  # each client resumes from its own (possibly stale) model
+
+    def aggregate(algo, server, clients, x_star, active, p_t, t):
+        any_active = active.any()
+        agg = masked_mean(x_star, active)
+        new_server = jax.tree.map(
+            lambda a, s: jnp.where(any_active, a, s), agg, server)
+        # postponed broadcast: only active clients receive the new global model
+        new_clients = bcast_where(active, new_server, x_star)
+        return algo, new_server, new_clients
+
+    return Algorithm("fedpbc", init, client_start, aggregate)
+
+
+# ---------------------------------------------------------------------------
+# FedAvg family
+# ---------------------------------------------------------------------------
+
+
+def fedavg() -> Algorithm:
+    """Vanilla FedAvg: broadcast at round start; average active clients."""
+
+    def init(server, m):
+        return ()
+
+    def client_start(algo, server, clients):
+        m = jax.tree.leaves(clients)[0].shape[0]
+        return _tile(server, m)
+
+    def aggregate(algo, server, clients, x_star, active, p_t, t):
+        any_active = active.any()
+        agg = masked_mean(x_star, active)
+        new_server = jax.tree.map(lambda a, s: jnp.where(any_active, a, s), agg, server)
+        m = active.shape[0]
+        return algo, new_server, _tile(new_server, m)
+
+    return Algorithm("fedavg", init, client_start, aggregate)
+
+
+def fedavg_all() -> Algorithm:
+    """FedAvg-all: average over ALL m clients; inactive contribute zero update."""
+
+    def init(server, m):
+        return ()
+
+    def client_start(algo, server, clients):
+        m = jax.tree.leaves(clients)[0].shape[0]
+        return _tile(server, m)
+
+    def aggregate(algo, server, clients, x_star, active, p_t, t):
+        m = active.shape[0]
+        w = active.astype(jnp.float32) / m
+        delta = jax.tree.map(lambda xs, s: xs.astype(jnp.float32) - s[None].astype(jnp.float32), x_star, server)
+        upd = weighted_sum(delta, w)
+        new_server = jax.tree.map(lambda s, u: s + u.astype(s.dtype), server, upd)
+        return algo, new_server, _tile(new_server, m)
+
+    return Algorithm("fedavg_all", init, client_start, aggregate)
+
+
+def fedavg_known_p() -> Algorithm:
+    """FedAvg with known p_i^t: active updates importance-weighted by 1/p_i^t."""
+
+    def init(server, m):
+        return ()
+
+    def client_start(algo, server, clients):
+        m = jax.tree.leaves(clients)[0].shape[0]
+        return _tile(server, m)
+
+    def aggregate(algo, server, clients, x_star, active, p_t, t):
+        m = active.shape[0]
+        w = active.astype(jnp.float32) / jnp.maximum(p_t, 1e-3) / m
+        delta = jax.tree.map(lambda xs, s: xs.astype(jnp.float32) - s[None].astype(jnp.float32), x_star, server)
+        upd = weighted_sum(delta, w)
+        new_server = jax.tree.map(lambda s, u: s + u.astype(s.dtype), server, upd)
+        return algo, new_server, _tile(new_server, m)
+
+    return Algorithm("fedavg_known_p", init, client_start, aggregate, needs_p=True)
+
+
+# ---------------------------------------------------------------------------
+# FedAU (Wang & Ji 2023): online estimate of participation via mean
+# inter-participation gap, capped at K.
+# ---------------------------------------------------------------------------
+
+
+def fedau(K: int = 50) -> Algorithm:
+    def init(server, m):
+        return {
+            "gap": jnp.zeros((m,), jnp.float32),       # rounds since last active
+            "sum_gaps": jnp.zeros((m,), jnp.float32),
+            "n_gaps": jnp.zeros((m,), jnp.float32),
+        }
+
+    def client_start(algo, server, clients):
+        m = jax.tree.leaves(clients)[0].shape[0]
+        return _tile(server, m)
+
+    def aggregate(algo, server, clients, x_star, active, p_t, t):
+        m = active.shape[0]
+        gap = jnp.minimum(algo["gap"] + 1.0, float(K))
+        sum_gaps = algo["sum_gaps"] + jnp.where(active, gap, 0.0)
+        n_gaps = algo["n_gaps"] + active.astype(jnp.float32)
+        mean_gap = jnp.where(n_gaps > 0, sum_gaps / jnp.maximum(n_gaps, 1.0), 1.0)
+        w = active.astype(jnp.float32) * mean_gap / m   # mean gap ~= 1/p_i
+        delta = jax.tree.map(lambda xs, s: xs.astype(jnp.float32) - s[None].astype(jnp.float32), x_star, server)
+        upd = weighted_sum(delta, w)
+        new_server = jax.tree.map(lambda s, u: s + u.astype(s.dtype), server, upd)
+        new_algo = {
+            "gap": jnp.where(active, 0.0, gap),
+            "sum_gaps": sum_gaps,
+            "n_gaps": n_gaps,
+        }
+        return new_algo, new_server, _tile(new_server, m)
+
+    return Algorithm("fedau", init, client_start, aggregate)
+
+
+# ---------------------------------------------------------------------------
+# MIFA (Gu et al. 2021): memory of every client's last normalized update.
+# ---------------------------------------------------------------------------
+
+
+def mifa() -> Algorithm:
+    def init(server, m):
+        return {"mem": _tile(jax.tree.map(jnp.zeros_like, server), m)}
+
+    def client_start(algo, server, clients):
+        m = jax.tree.leaves(clients)[0].shape[0]
+        return _tile(server, m)
+
+    def aggregate(algo, server, clients, x_star, active, p_t, t):
+        m = active.shape[0]
+        delta = jax.tree.map(lambda xs, s: xs.astype(jnp.float32) - s[None].astype(jnp.float32), x_star, server)
+        mem = jax.tree.map(
+            lambda old, new: jnp.where(_bmask(active, old) > 0, new.astype(old.dtype), old),
+            algo["mem"], delta)
+        upd = jax.tree.map(lambda g: g.mean(0), mem)
+        new_server = jax.tree.map(lambda s, u: s + u.astype(s.dtype), server, upd)
+        return {"mem": mem}, new_server, _tile(new_server, m)
+
+    return Algorithm("mifa", init, client_start, aggregate)
+
+
+# ---------------------------------------------------------------------------
+# F3AST (Ribero et al. 2022): availability-balanced scheduling — the server
+# selects at most `cap` active clients, preferring those with the SMALLEST
+# long-run availability estimate lambda_i; lambda tracked by EMA.
+# ---------------------------------------------------------------------------
+
+
+def f3ast(beta: float = 0.01, cap: int = 10) -> Algorithm:
+    def init(server, m):
+        return {"lam": jnp.full((m,), 0.5, jnp.float32)}
+
+    def client_start(algo, server, clients):
+        m = jax.tree.leaves(clients)[0].shape[0]
+        return _tile(server, m)
+
+    def aggregate(algo, server, clients, x_star, active, p_t, t):
+        m = active.shape[0]
+        lam = (1.0 - beta) * algo["lam"] + beta * active.astype(jnp.float32)
+        # rank active clients by lambda ascending; keep `cap`
+        score = jnp.where(active, lam, jnp.inf)
+        order = jnp.argsort(score)
+        rank = jnp.argsort(order)
+        selected = active & (rank < cap)
+        any_sel = selected.any()
+        agg = masked_mean(x_star, selected)
+        new_server = jax.tree.map(lambda a, s: jnp.where(any_sel, a, s), agg, server)
+        return {"lam": lam}, new_server, _tile(new_server, m)
+
+    return Algorithm("f3ast", init, client_start, aggregate)
+
+
+# ---------------------------------------------------------------------------
+# FedPBC-M (beyond-paper): FedPBC + server momentum on the aggregated
+# direction. The postponed-broadcast/gossip structure is unchanged (the
+# momentum acts on x^{t+1} - x^t, which Thm. 1's descent lemma controls);
+# empirically it accelerates the information-mixing phase under sparse
+# participation. Recorded as an EXTENSION, not part of the reproduction.
+# ---------------------------------------------------------------------------
+
+
+def fedpbc_m(beta: float = 0.8) -> Algorithm:
+    def init(server, m):
+        return {"mom": jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32), server)}
+
+    def client_start(algo, server, clients):
+        return clients
+
+    def aggregate(algo, server, clients, x_star, active, p_t, t):
+        any_active = active.any()
+        agg = masked_mean(x_star, active)
+        step = jax.tree.map(
+            lambda a, s: jnp.where(any_active, a.astype(jnp.float32)
+                                   - s.astype(jnp.float32), 0.0), agg, server)
+        mom = jax.tree.map(lambda m_, g: beta * m_ + g, algo["mom"], step)
+        new_server = jax.tree.map(
+            lambda s, m_: (s.astype(jnp.float32) + m_).astype(s.dtype), server, mom)
+        new_clients = bcast_where(active, new_server, x_star)
+        return {"mom": mom}, new_server, new_clients
+
+    return Algorithm("fedpbc_m", init, client_start, aggregate)
+
+
+ALGORITHMS = {
+    "fedpbc": fedpbc,
+    "fedpbc_m": fedpbc_m,
+    "fedavg": fedavg,
+    "fedavg_all": fedavg_all,
+    "fedau": fedau,
+    "mifa": mifa,
+    "fedavg_known_p": fedavg_known_p,
+    "f3ast": f3ast,
+}
+
+
+def make_algorithm(cfg: FederationConfig) -> Algorithm:
+    name = cfg.algorithm
+    if name == "fedau":
+        return fedau(cfg.fedau_K)
+    if name == "f3ast":
+        return f3ast(cfg.f3ast_beta, cfg.f3ast_cap)
+    if name == "fedpbc_m":
+        return fedpbc_m()
+    return ALGORITHMS[name]()

@@ -1,0 +1,130 @@
+"""Unreliable-uplink processes (paper §7.2).
+
+Implements the paper's construction of the per-client connection
+probabilities (Eq. 9) and the three unreliable schemes — Bernoulli,
+two-state Markov, cyclic — each with time-invariant and time-varying /
+homogeneous and non-homogeneous / reset and no-reset variants.
+
+All processes are functional and jit-able: ``sample(state, t, key)``
+returns ``(active_mask [m] bool, p_t [m], new_state)``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FederationConfig
+
+
+# ---------------------------------------------------------------------------
+# Eq. (9): p_i construction from data heterogeneity
+# ---------------------------------------------------------------------------
+
+
+def build_base_probs(key, num_clients, num_classes, *, alpha=0.1, sigma0=10.0,
+                     mu0=0.0, delta=0.02):
+    """Paper §7.2: nu_i ~ Dirichlet(alpha); r ~ lognormal(mu0, sigma0^2)^C
+    normalized; p_i = <r, nu_i> clipped at delta. Returns (p [m], nu [m, C], r [C])."""
+    k1, k2 = jax.random.split(key)
+    nu = jax.random.dirichlet(k1, jnp.full((num_classes,), alpha), (num_clients,))
+    r = jnp.exp(mu0 + sigma0 * jax.random.normal(k2, (num_classes,)))
+    r = r / r.sum()
+    p = nu @ r
+    return jnp.maximum(p, delta), nu, r
+
+
+def p_of_t(p_base, t, *, gamma, period):
+    """Eq. (9): p_i^t = p_i * [(1-gamma) + gamma * sin(2 pi t / P)]."""
+    eps = jnp.sin(2.0 * jnp.pi * t / period)
+    return jnp.clip(p_base * ((1.0 - gamma) + gamma * eps), 0.0, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Link processes
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class LinkProcess:
+    init: Callable[..., Any]          # (key) -> state
+    sample: Callable[..., Any]        # (state, t, key) -> (active, p_t, state)
+    name: str = ""
+
+
+def bernoulli_process(p_base, cfg: FederationConfig) -> LinkProcess:
+    tv = cfg.time_varying
+
+    def init(key):
+        return ()
+
+    def sample(state, t, key):
+        p_t = p_of_t(p_base, t, gamma=cfg.gamma, period=cfg.period) if tv else p_base
+        active = jax.random.uniform(key, p_base.shape) < p_t
+        return active, p_t, state
+
+    return LinkProcess(init, sample, f"bernoulli_{'tv' if tv else 'ti'}")
+
+
+def markov_process(p_base, cfg: FederationConfig) -> LinkProcess:
+    """Two-state ON/OFF chain, Table 3 transition construction.
+
+    Homogeneous: transitions from time-invariant p_i.
+    Non-homogeneous: transitions re-derived from time-varying p_i^t.
+    """
+    tv = cfg.time_varying
+
+    def transitions(p_t):
+        p_t = jnp.clip(p_t, 1e-4, 1 - 1e-4)
+        cond = 0.05 * (1.0 - p_t) <= p_t
+        q_star = jnp.where(cond, 0.05, p_t / (1.0 - p_t))          # OFF -> ON
+        q = jnp.where(cond, 0.05 * (1.0 - p_t) / p_t, 1.0)          # ON -> OFF
+        return q, q_star
+
+    def init(key):
+        on = jax.random.uniform(key, p_base.shape) < p_base
+        return on
+
+    def sample(on, t, key):
+        p_t = p_of_t(p_base, t, gamma=cfg.gamma, period=cfg.period) if tv else p_base
+        q, q_star = transitions(p_t)
+        u = jax.random.uniform(key, p_base.shape)
+        new_on = jnp.where(on, u >= q, u < q_star)
+        return new_on, p_t, new_on
+
+    return LinkProcess(init, sample, f"markov_{'nonhom' if tv else 'hom'}")
+
+
+def cyclic_process(p_base, cfg: FederationConfig) -> LinkProcess:
+    """Fig. 5: link active for p_i*L of every cycle of length L, after a random
+    offset drawn once (no reset) or redrawn every cycle (periodic reset)."""
+    L = cfg.cyclic_length
+
+    def init(key):
+        off = jax.random.uniform(key, p_base.shape) * (1.0 - p_base) * L
+        return {"offset": off, "key": key}
+
+    def sample(state, t, key):
+        phase = jnp.mod(jnp.asarray(t, jnp.float32), L)
+        if cfg.cyclic_reset:
+            cycle = jnp.asarray(t, jnp.int32) // L
+            kc = jax.random.fold_in(state["key"], cycle)
+            off = jax.random.uniform(kc, p_base.shape) * (1.0 - p_base) * L
+        else:
+            off = state["offset"]
+        active = (phase >= off) & (phase < off + p_base * L)
+        return active, p_base, state
+
+    return LinkProcess(init, sample, f"cyclic_{'reset' if cfg.cyclic_reset else 'noreset'}")
+
+
+def make_link_process(p_base, cfg: FederationConfig) -> LinkProcess:
+    if cfg.scheme == "bernoulli":
+        return bernoulli_process(p_base, cfg)
+    if cfg.scheme == "markov":
+        return markov_process(p_base, cfg)
+    if cfg.scheme == "cyclic":
+        return cyclic_process(p_base, cfg)
+    raise ValueError(cfg.scheme)

@@ -1,0 +1,13 @@
+from repro.data.partition import dirichlet_partition
+from repro.data.synthetic import (
+    federated_classification_batches,
+    federated_lm_batches,
+    make_classification_data,
+)
+
+__all__ = [
+    "dirichlet_partition",
+    "make_classification_data",
+    "federated_classification_batches",
+    "federated_lm_batches",
+]

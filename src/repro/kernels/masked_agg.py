@@ -1,0 +1,47 @@
+"""Pallas TPU kernel: FedPBC masked client aggregation (Alg. 1 line 11).
+
+The server-side hot spot: out = (1/|A|) sum_{i in A} x_i over the stacked
+client-parameter axis. On TPU this is a memory-bound streaming reduction; the
+kernel tiles the (flattened) parameter dimension into VMEM-resident blocks
+and keeps the whole (small) client axis per block, so each output element is
+produced in one pass over HBM.
+
+Grid: (n // block_n,).  x block: [m, block_n] VMEM; mask: [m, 1] VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(mask_ref, x_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)              # [m, bn]
+    mask = mask_ref[...].astype(jnp.float32)        # [m, 1]
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    o_ref[...] = (jnp.sum(x * mask, axis=0, keepdims=True) / denom)[0]
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def masked_agg(x, mask, *, block_n: int = 4096, interpret: bool = True):
+    """x: [m, n]; mask: [m]. Returns [n] fp32 (active-client mean)."""
+    m, n = x.shape
+    pad = (-n) % block_n
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad)))
+    np_ = x.shape[1]
+    mask2 = mask.astype(jnp.float32).reshape(m, 1)
+    out = pl.pallas_call(
+        _kernel,
+        grid=(np_ // block_n,),
+        in_specs=[
+            pl.BlockSpec((m, 1), lambda i: (0, 0)),
+            pl.BlockSpec((m, block_n), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((block_n,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((np_,), jnp.float32),
+        interpret=interpret,
+    )(mask2, x)
+    return out[:n]

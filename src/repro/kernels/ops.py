@@ -1,0 +1,53 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On this CPU container kernels run with ``interpret=True`` (Pallas executes the
+kernel body in Python); on TPU set ``interpret=False``. The model forward
+paths use the pure-jnp implementations by default — the kernels are the
+TPU-target hot-spot implementations, validated against ``ref.py``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.masked_agg import masked_agg
+from repro.kernels.ref import flash_attention_ref, masked_agg_ref, rwkv6_chunk_ref
+from repro.kernels.rwkv6_chunk import rwkv6_chunk
+
+
+def masked_agg_pytree(clients, mask, *, interpret: bool = True):
+    """FedPBC aggregation over an [m, ...] client-stacked pytree using the
+    masked_agg kernel per (flattened) leaf."""
+    def leaf(x):
+        m = x.shape[0]
+        flat = x.reshape(m, -1)
+        out = masked_agg(flat, mask, interpret=interpret)
+        return out.reshape(x.shape[1:]).astype(x.dtype)
+    return jax.tree.map(leaf, clients)
+
+
+def gqa_flash_attention(q, k, v, *, causal=True, window=0, logit_softcap=0.0,
+                        interpret: bool = True):
+    """q: [B, T, H, D]; k, v: [B, T, KV, D] (GQA) -> [B, T, H, D]."""
+    b, t, h, d = q.shape
+    kv = k.shape[2]
+    rep = h // kv
+    qt = q.transpose(0, 2, 1, 3)
+    kt = jnp.repeat(k.transpose(0, 2, 1, 3), rep, axis=1)
+    vt = jnp.repeat(v.transpose(0, 2, 1, 3), rep, axis=1)
+    o = flash_attention(qt, kt, vt, causal=causal, window=window,
+                        logit_softcap=logit_softcap, interpret=interpret)
+    return o.transpose(0, 2, 1, 3)
+
+
+__all__ = [
+    "masked_agg",
+    "masked_agg_pytree",
+    "masked_agg_ref",
+    "flash_attention",
+    "flash_attention_ref",
+    "gqa_flash_attention",
+    "rwkv6_chunk",
+    "rwkv6_chunk_ref",
+]

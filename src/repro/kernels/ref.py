@@ -1,0 +1,56 @@
+"""Pure-jnp oracles for the Pallas kernels (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def masked_agg_ref(x, mask):
+    """FedPBC server aggregation (Alg. 1 line 11): mean over active clients.
+
+    x: [m, n] stacked client parameters; mask: [m] bool/0-1.
+    out: [n] = sum_i mask_i x_i / max(1, sum mask).
+    """
+    mask = mask.astype(jnp.float32)
+    denom = jnp.maximum(mask.sum(), 1.0)
+    return (x.astype(jnp.float32) * mask[:, None]).sum(0) / denom
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0, logit_softcap=0.0):
+    """Naive softmax attention. q,k,v: [B, H, T, D] (same head count)."""
+    b, h, t, d = q.shape
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (d ** -0.5)
+    if logit_softcap:
+        s = logit_softcap * jnp.tanh(s / logit_softcap)
+    qp = jnp.arange(t)
+    allow = jnp.ones((t, t), bool)
+    if causal:
+        allow &= qp[:, None] >= qp[None, :]
+    if window:
+        allow &= qp[:, None] - qp[None, :] < window
+    s = jnp.where(allow, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def rwkv6_chunk_ref(r, k, v, w, u, s0):
+    """RWKV6 recurrence, step-by-step scan (the semantic ground truth).
+
+    r,k,v,w: [B, H, T, D]; u: [H, D]; s0: [B, H, D, D] (S[k_dim, v_dim]).
+    Returns (o [B,H,T,D], s_T).
+      o_t = r_t @ S_{t-1} + (r_t . (u * k_t)) v_t
+      S_t = diag(w_t) S_{t-1} + k_t^T v_t
+    """
+    b, h, t, d = r.shape
+
+    def step(s, xs):
+        rt, kt, vt, wt = xs  # [B,H,D]
+        o = jnp.einsum("bhk,bhkv->bhv", rt, s)
+        o = o + jnp.sum(rt * u[None] * kt, -1, keepdims=True) * vt
+        s = wt[..., None] * s + kt[..., None] * vt[..., None, :]
+        return s, o
+
+    xs = tuple(x.transpose(2, 0, 1, 3) for x in (r, k, v, w))
+    s_t, o = jax.lax.scan(step, s0.astype(jnp.float32), xs)
+    return o.transpose(1, 2, 0, 3), s_t

@@ -1,0 +1,26 @@
+"""Production meshes. Factories only — importing this module never touches
+jax device state."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Single-device mesh for CPU smoke runs (same axis names)."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def dp_axes(mesh) -> tuple:
+    """The data-parallel axes: ("pod","data") on the multi-pod mesh."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def num_clients_for(mesh) -> int:
+    """pod_silo placement: one federated client per pod."""
+    return mesh.shape["pod"] if "pod" in mesh.axis_names else 1

@@ -1,0 +1,225 @@
+"""Step builders + ShapeDtypeStruct input specs for dry-run / train / serve.
+
+- ``train_step``: one full FedPBC round (Alg. 1) at datacenter scale in the
+  ``pod_silo`` placement — each pod is one federated client; the masked
+  aggregation + postponed broadcast lower to cross-pod collectives.
+- ``prefill_step``: full-sequence forward (inference prefill).
+- ``serve_step``: one-token decode against the KV/SSM/RWKV cache + greedy
+  sampling.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import FederationConfig, ModelConfig, ShapeConfig
+from repro.core.algorithms import make_algorithm
+from repro.core.connectivity import make_link_process
+from repro.core.federated import FedState, init_fed_state, make_round_fn
+from repro.launch.mesh import dp_axes, num_clients_for
+from repro.models.model import (
+    decode_step,
+    forward,
+    init_params,
+    loss_fn,
+    make_cache,
+)
+from repro.optim import sgd
+from repro.sharding.specs import infer_pytree_specs, spec_for_shape
+
+MEM_DTYPE = jnp.bfloat16
+
+
+def _memory_shape(cfg: ModelConfig, batch: int):
+    if cfg.family == "vlm":
+        return (batch, cfg.num_image_tokens, cfg.d_model)
+    if cfg.family == "audio":
+        return (batch, cfg.num_audio_frames, cfg.d_model)
+    return None
+
+
+# ---------------------------------------------------------------------------
+# Train (federated round)
+# ---------------------------------------------------------------------------
+
+
+def make_fed_setup(cfg: ModelConfig, mesh: Mesh, *, local_steps: int = 1,
+                   algorithm: str = "fedpbc"):
+    m = num_clients_for(mesh)
+    fed = FederationConfig(algorithm=algorithm, num_clients=m,
+                           local_steps=local_steps, scheme="bernoulli",
+                           placement="pod_silo")
+    algo = make_algorithm(fed)
+    p_base = jnp.full((m,), 0.8)
+    link = make_link_process(p_base, fed)
+    opt = sgd(1e-3, momentum=0.9)
+
+    def _loss(params, batch):
+        return loss_fn(params, cfg, batch)
+
+    spmd = "pod" if ("pod" in mesh.axis_names and m > 1) else None
+    round_fn = make_round_fn(_loss, opt, algo, link, fed, spmd_axis_name=spmd)
+    return fed, algo, link, opt, round_fn
+
+
+def train_input_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                      *, local_steps: int = 1):
+    """ShapeDtypeStructs for (FedState, batches) of one federated round."""
+    m = num_clients_for(mesh)
+    b_client = shape.global_batch // m
+    fed, algo, link, opt, _ = make_fed_setup(cfg, mesh, local_steps=local_steps)
+
+    def make_state():
+        params = init_params(jax.random.PRNGKey(0), cfg)
+        return init_fed_state(jax.random.PRNGKey(1), params, fed, algo, link, opt)
+
+    state = jax.eval_shape(make_state)
+    batches = {
+        "tokens": jax.ShapeDtypeStruct((m, local_steps, b_client, shape.seq_len), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((m, local_steps, b_client, shape.seq_len), jnp.int32),
+    }
+    ms = _memory_shape(cfg, b_client)
+    if ms:
+        batches["memory"] = jax.ShapeDtypeStruct((m, local_steps) + ms, MEM_DTYPE)
+    return state, batches
+
+
+def _batch_spec(shape, mesh):
+    """[m, s, B, ...]: client axis over 'pod', batch over 'data'."""
+    dp = "data"
+    spec = [None] * len(shape)
+    if "pod" in mesh.axis_names and shape[0] % mesh.shape["pod"] == 0:
+        spec[0] = "pod"
+    if len(shape) >= 3 and shape[2] % mesh.shape[dp] == 0:
+        spec[2] = dp
+    return P(*spec)
+
+
+def train_shardings(state, batches, mesh: Mesh):
+    client_leaves = ("clients", "opt_state", "algo_state", "last_active")
+
+    def state_specs(s: FedState):
+        return FedState(
+            server=infer_pytree_specs(s.server, mesh),
+            clients=infer_pytree_specs(s.clients, mesh, client_axis=True),
+            opt_state=infer_pytree_specs(s.opt_state, mesh, client_axis=True),
+            algo_state=infer_pytree_specs(s.algo_state, mesh, client_axis=True),
+            link_state=jax.tree.map(
+                lambda x: NamedSharding(mesh, P()), s.link_state),
+            round=NamedSharding(mesh, P()),
+            key=NamedSharding(mesh, P()),
+            last_active=NamedSharding(mesh, P()),
+        )
+
+    st_specs = state_specs(state)
+    b_specs = jax.tree.map(
+        lambda x: NamedSharding(mesh, _batch_spec(x.shape, mesh)), batches)
+    return st_specs, b_specs
+
+
+def make_train_step(cfg: ModelConfig, mesh: Mesh, *, local_steps: int = 1,
+                    algorithm: str = "fedpbc"):
+    _, _, _, _, round_fn = make_fed_setup(cfg, mesh, local_steps=local_steps,
+                                          algorithm=algorithm)
+    return round_fn
+
+
+# ---------------------------------------------------------------------------
+# Prefill / decode (serve path)
+# ---------------------------------------------------------------------------
+
+
+def prefill_input_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh):
+    params = jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+    tokens = jax.ShapeDtypeStruct((shape.global_batch, shape.seq_len), jnp.int32)
+    ms = _memory_shape(cfg, shape.global_batch)
+    memory = jax.ShapeDtypeStruct(ms, MEM_DTYPE) if ms else None
+    return params, tokens, memory
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill(params, tokens, memory=None):
+        logits, _ = forward(params, cfg, tokens, memory=memory)
+        # return only last-position logits (next-token) to bound output size
+        return logits[:, -1]
+    return prefill
+
+
+def serve_input_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh):
+    params = jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+    cache = jax.eval_shape(
+        lambda: make_cache(cfg, shape.global_batch, shape.seq_len))
+    token = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    ms = _memory_shape(cfg, shape.global_batch)
+    memory = jax.ShapeDtypeStruct(ms, MEM_DTYPE) if ms else None
+    return params, cache, token, pos, memory
+
+
+def make_serve_step(cfg: ModelConfig):
+    def serve(params, cache, token, pos, memory=None):
+        logits, cache = decode_step(params, cfg, token, cache, pos, memory=memory)
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        return nxt, cache
+    return serve
+
+
+def _cache_leaf_spec(path, x, mesh: Mesh, batch: int):
+    """Cache leaves: [n_periods, B, S, KV, hd] (attn) / rwkv / ssm states.
+    Batch over dp axes; long (seq/state) dims over 'model' when divisible."""
+    dp = dp_axes(mesh)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+    nd = x.ndim
+    spec = [None] * nd
+    if nd >= 2 and x.shape[1] % dp_size == 0 and x.shape[1] >= dp_size:
+        spec[1] = dp
+    if name in ("k", "v") and nd == 5 and x.shape[2] % mesh.shape["model"] == 0:
+        spec[2] = "model"        # cache sequence dim
+    elif name == "h" and nd == 4 and x.shape[2] % mesh.shape["model"] == 0:
+        spec[2] = "model"        # mamba d_inner
+    elif name == "conv" and nd == 4 and x.shape[3] % mesh.shape["model"] == 0:
+        spec[3] = "model"
+    return NamedSharding(mesh, P(*spec))
+
+
+def _tp2d_spec(x, mesh: Mesh):
+    """Decode-oriented 2D tensor parallelism (§Perf H4): shard each weight's
+    last (output) dim over BOTH mesh axes so matmuls consume local shards
+    (contracting-dim partials -> psum) and no weight all-gathers occur."""
+    both = 1
+    for a in ("data", "model"):
+        both *= mesh.shape[a]
+    shape = x.shape
+    spec = [None] * len(shape)
+    if len(shape) >= 2:
+        if shape[-1] % both == 0 and shape[-1] >= both:
+            spec[-1] = ("data", "model")
+        elif shape[-1] % mesh.shape["model"] == 0:
+            spec[-1] = "model"
+            if shape[-2] % mesh.shape["data"] == 0 and shape[-2] >= mesh.shape["data"] * 2:
+                spec[-2] = "data"
+        elif shape[-2] % mesh.shape["model"] == 0:
+            spec[-2] = "model"
+    return NamedSharding(mesh, P(*spec))
+
+
+def serve_shardings(params, cache, mesh: Mesh, batch: int, *, tp2d: bool = False):
+    if tp2d:
+        p_specs = jax.tree.map(lambda x: _tp2d_spec(x, mesh), params)
+    else:
+        p_specs = infer_pytree_specs(params, mesh)
+    c_specs = jax.tree_util.tree_map_with_path(
+        lambda path, x: _cache_leaf_spec(path, x, mesh, batch), cache)
+    dp = dp_axes(mesh)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    tok_spec = NamedSharding(mesh, P(dp if batch % dp_size == 0 else None, None))
+    return p_specs, c_specs, tok_spec

@@ -1,0 +1,185 @@
+"""Chunked (online-softmax) attention in pure jnp.
+
+No ``L x L`` score tensor is ever materialized: training/prefill scans over KV
+chunks carrying the running (max, denominator, accumulator) triple — the flash
+attention recurrence expressed at the XLA level. This is what makes 32k
+prefill and 500k decode lowerable within HBM; the Pallas kernel in
+``repro.kernels.flash_attention`` implements the same recurrence with explicit
+VMEM BlockSpecs for TPU and is validated against this reference.
+
+Supported masks: causal full, sliding-window (swa), block-local (chunked),
+and per-layer local/global alternation (gemma2). Logit softcap supported.
+GQA via kv-head broadcast.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.flags import analysis_chunk, scan_unroll
+
+NEG_INF = -1e30
+
+
+def _repeat_kv(k, n_rep):
+    if n_rep == 1:
+        return k
+    b, s, kvh, d = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, kvh, n_rep, d)).reshape(b, s, kvh * n_rep, d)
+
+
+def _mask_chunk(q_pos, k_pos, kind, window):
+    """[Tq, Tk] boolean allow-mask for query positions vs key positions."""
+    causal = q_pos[:, None] >= k_pos[None, :]
+    if kind == "full":
+        return causal
+    if kind == "swa":
+        return causal & (q_pos[:, None] - k_pos[None, :] < window)
+    if kind == "chunked":
+        return causal & (q_pos[:, None] // window == k_pos[None, :] // window)
+    raise ValueError(kind)
+
+
+def attention(q, k, v, *, kind="full", window=4096, logit_softcap=0.0,
+              chunk=1024, q_offset=0):
+    """Causal multi-head attention, chunked over KV.
+
+    q: [B, Tq, H, D];  k, v: [B, Tk, KV, D];  returns [B, Tq, H, D].
+    ``q_offset``: absolute position of q[0] (Tk = q_offset + Tq for training).
+    """
+    b, tq, h, d = q.shape
+    tk = k.shape[1]
+    n_rep = h // k.shape[2]
+    k = _repeat_kv(k, n_rep)
+    v = _repeat_kv(v, n_rep)
+    scale = d ** -0.5
+    qf = (q * scale).astype(jnp.float32).transpose(0, 2, 1, 3)  # [B,H,Tq,D]
+    q_pos = q_offset + jnp.arange(tq)
+
+    chunk = min(analysis_chunk(chunk, tk), tk)
+    n_chunks = -(-tk // chunk)
+    pad = n_chunks * chunk - tk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    # [N, B, H, C, D]
+    kc = k.reshape(b, n_chunks, chunk, h, d).transpose(1, 0, 3, 2, 4)
+    vc = v.reshape(b, n_chunks, chunk, h, d).transpose(1, 0, 3, 2, 4)
+
+    def body(carry, xs):
+        m, l, acc, idx = carry
+        kb, vb = xs
+        k_pos = idx * chunk + jnp.arange(chunk)
+        s = jnp.einsum("bhqd,bhkd->bhqk", qf, kb.astype(jnp.float32))
+        if logit_softcap:
+            s = logit_softcap * jnp.tanh(s / logit_softcap)
+        allow = _mask_chunk(q_pos, k_pos, kind, window) & (k_pos < tk)[None, :]
+        s = jnp.where(allow[None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhqk,bhkd->bhqd", p, vb.astype(jnp.float32))
+        return (m_new, l_new, acc_new, idx + 1), None
+
+    m0 = jnp.full((b, h, tq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, h, tq), jnp.float32)
+    a0 = jnp.zeros((b, h, tq, d), jnp.float32)
+    # flash-training memory: backward recomputes per-chunk probabilities
+    # instead of saving the stacked [B,H,Tq,Tk] scores.
+    body = jax.checkpoint(body, prevent_cse=False)
+    (m, l, acc, _), _ = jax.lax.scan(body, (m0, l0, a0, jnp.int32(0)), (kc, vc),
+                                     unroll=scan_unroll())
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+def cross_attention(q, k, v, *, q_chunk=512):
+    """Non-causal attention against fixed memory (image / encoder tokens).
+    Chunked over queries so scores stay [B, H, q_chunk, Tk]."""
+    b, tq, h, d = q.shape
+    n_rep = h // k.shape[2]
+    kf = _repeat_kv(k, n_rep).astype(jnp.float32)
+    vf = _repeat_kv(v, n_rep).astype(jnp.float32)
+
+    def one_chunk(qc):
+        s = jnp.einsum("bqhd,bkhd->bhqk", qc.astype(jnp.float32) * d ** -0.5, kf)
+        p = jax.nn.softmax(s, axis=-1)
+        return jnp.einsum("bhqk,bkhd->bqhd", p, vf).astype(q.dtype)
+
+    if tq <= q_chunk:
+        return one_chunk(q)
+    n = -(-tq // q_chunk)
+    pad = n * q_chunk - tq
+    qp = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0))) if pad else q
+    qc = qp.reshape(b, n, q_chunk, h, d).transpose(1, 0, 2, 3, 4)
+    _, out = jax.lax.scan(lambda c, x: (c, one_chunk(x)), None, qc,
+                          unroll=scan_unroll())
+    out = out.transpose(1, 0, 2, 3, 4).reshape(b, n * q_chunk, h, d)
+    return out[:, :tq]
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, *, kind="full",
+                     window=4096, logit_softcap=0.0, chunk=8192):
+    """Single-token decode: q [B, 1, H, D], cache [B, S, KV, D].
+
+    Convention: the new token's k/v have already been written into the cache,
+    and ``cache_len`` counts them (the query position is ``cache_len - 1``).
+    For windowed kinds only the trailing ``window`` cache positions are
+    attended (sliced), bounding work for 500k contexts; full attention scans
+    the entire cache in chunks with an online softmax.
+    """
+    b, _, h, d = q.shape
+    s_max = k_cache.shape[1]
+    if kind in ("swa", "chunked"):
+        w = min(window, s_max)
+        start = jnp.clip(cache_len - w, 0, s_max - w)
+        k_cache = jax.lax.dynamic_slice_in_dim(k_cache, start, w, axis=1)
+        v_cache = jax.lax.dynamic_slice_in_dim(v_cache, start, w, axis=1)
+        pos = start + jnp.arange(w)
+        if kind == "chunked":
+            valid = (pos < cache_len) & (pos // window == jnp.maximum(cache_len - 1, 0) // window)
+        else:
+            valid = (pos < cache_len) & (cache_len - 1 - pos < window)
+    else:
+        pos = jnp.arange(s_max)
+        valid = pos < cache_len
+
+    n_rep = h // k_cache.shape[2]
+    kf = _repeat_kv(k_cache, n_rep)
+    vf = _repeat_kv(v_cache, n_rep)
+    tk = kf.shape[1]
+    chunk = min(analysis_chunk(chunk, tk), tk)
+    n_chunks = -(-tk // chunk)
+    pad = n_chunks * chunk - tk
+    if pad:
+        kf = jnp.pad(kf, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        vf = jnp.pad(vf, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        valid = jnp.pad(valid, (0, pad))
+    kc = kf.reshape(b, n_chunks, chunk, h, d).transpose(1, 0, 3, 2, 4)
+    vc = vf.reshape(b, n_chunks, chunk, h, d).transpose(1, 0, 3, 2, 4)
+    validc = valid.reshape(n_chunks, chunk)
+    qf = (q[:, 0] * d ** -0.5).astype(jnp.float32)  # [B, H, D]
+
+    def body(carry, xs):
+        m, l, acc = carry
+        kb, vb, ok = xs
+        s = jnp.einsum("bhd,bhkd->bhk", qf, kb.astype(jnp.float32))
+        if logit_softcap:
+            s = logit_softcap * jnp.tanh(s / logit_softcap)
+        s = jnp.where(ok[None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum("bhk,bhkd->bhd", p, vb.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, h), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, h), jnp.float32)
+    a0 = jnp.zeros((b, h, d), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kc, vc, validc),
+                                  unroll=scan_unroll())
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out[:, None].astype(q.dtype)  # [B, 1, H, D]

@@ -1,0 +1,41 @@
+"""Analysis-mode flags.
+
+XLA's HloCostAnalysis counts a ``while`` body ONCE regardless of trip count,
+so cost_analysis() on a scanned layer stack undercounts flops/bytes and the
+HLO text shows loop-body collectives once. For the roofline pass, dryrun
+lowers two shallow variants (depth P and 2P) with every scan *unrolled*
+(``analysis_mode``) and extrapolates the per-period body:
+``total = f(P) + (n_periods - 1) * (f(2P) - f(P))``.
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+
+_ctx = threading.local()
+
+
+def analysis_mode() -> bool:
+    return getattr(_ctx, "analysis", False)
+
+
+@contextmanager
+def analysis(enabled: bool = True):
+    old = analysis_mode()
+    _ctx.analysis = enabled
+    try:
+        yield
+    finally:
+        _ctx.analysis = old
+
+
+def scan_unroll() -> bool:
+    """unroll= argument for lax.scan: full unroll in analysis mode."""
+    return True if analysis_mode() else 1
+
+
+def analysis_chunk(default: int, total: int, max_trips: int = 16) -> int:
+    """Chunk size: in analysis mode bound the unrolled trip count."""
+    if not analysis_mode():
+        return default
+    return max(default, -(-total // max_trips))

@@ -1,0 +1,65 @@
+"""Basic model layers: norms, rope, MLPs, projections, init helpers."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def dtype_of(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def rms_norm(x, weight, eps=1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    out = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return ((1.0 + weight.astype(jnp.float32)) * out).astype(x.dtype)
+
+
+def init_dense(key, d_in, d_out, dtype, scale=None):
+    scale = scale if scale is not None else d_in ** -0.5
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def rope_angles(positions, head_dim, theta):
+    """positions [...,] int32 -> cos,sin [..., head_dim//2] in fp32."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x [..., T, H, D]; cos/sin [..., T, D/2] broadcast over heads."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate([x1f * c - x2f * s, x2f * c + x1f * s], axis=-1).astype(x.dtype)
+
+
+def mlp_init(key, cfg: ModelConfig, d_ff=None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    dt = dtype_of(cfg)
+    ks = jax.random.split(key, 3)
+    p = {"up": init_dense(ks[0], d, f, dt), "down": init_dense(ks[1], f, d, dt)}
+    if cfg.gated_mlp:
+        p["gate"] = init_dense(ks[2], d, f, dt)
+    return p
+
+
+def mlp_apply(p, x, gated=True):
+    h = x @ p["up"]
+    if gated:
+        h = jax.nn.silu(x @ p["gate"]) * h
+    else:
+        h = jax.nn.gelu(h)
+    return h @ p["down"]
+
+
+def softcap(logits, cap):
+    if not cap:
+        return logits
+    return cap * jnp.tanh(logits / cap)

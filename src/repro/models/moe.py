@@ -1,0 +1,115 @@
+"""Mixture-of-Experts FFN with top-k routing.
+
+Two dispatch strategies (``MoEConfig.dispatch``):
+
+- ``einsum``  — GShard/Switch-style one-hot capacity dispatch. Baseline:
+  lowers everywhere and shards cleanly (experts over the "model" axis when
+  divisible), but the dispatch/combine einsums contribute O(T * E*C * d)
+  HLO FLOPs which can rival the expert matmuls themselves. This is the
+  paper-era TPU formulation and our roofline *baseline*.
+- ``scatter`` — gather/scatter capacity dispatch: tokens are routed into the
+  [E, C, d] buffers with one scatter-add and combined with one gather, both
+  memory-bound. This is the beyond-baseline §Perf variant (hillclimb H1).
+
+Both are dropless up to the capacity factor; overflow tokens fall back to the
+residual stream (standard capacity semantics).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dtype_of, init_dense
+
+
+def moe_init(key, cfg: ModelConfig):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.moe.num_experts
+    dt = dtype_of(cfg)
+    ks = jax.random.split(key, 4)
+    p = {
+        "router": init_dense(ks[0], d, e, jnp.float32),
+        "up": (jax.random.normal(ks[1], (e, d, f), jnp.float32) * d ** -0.5).astype(dt),
+        "down": (jax.random.normal(ks[2], (e, f, d), jnp.float32) * f ** -0.5).astype(dt),
+    }
+    if cfg.gated_mlp:
+        p["gate"] = (jax.random.normal(ks[3], (e, d, f), jnp.float32) * d ** -0.5).astype(dt)
+    return p
+
+
+def _router(p, x2d, cfg: ModelConfig):
+    """Return top-k expert ids, renormalized gates, and aux load-balance loss."""
+    e = cfg.moe.num_experts
+    k = cfg.moe.top_k
+    logits = x2d.astype(jnp.float32) @ p["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, k)  # [T,k]
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    # Switch-style load-balance aux loss: E * sum_e f_e * P_e
+    me = probs.mean(0)
+    ce = jnp.zeros((e,), jnp.float32).at[idx.reshape(-1)].add(1.0) / (x2d.shape[0] * k)
+    aux = e * jnp.sum(me * ce)
+    return idx, gates, aux
+
+
+def _expert_ffn(p, xe, gated):
+    """xe [E, C, d] -> [E, C, d] through per-expert (gated) MLP."""
+    h = jnp.einsum("ecd,edf->ecf", xe, p["up"])
+    if gated:
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, p["gate"])) * h
+    else:
+        h = jax.nn.gelu(h)
+    return jnp.einsum("ecf,efd->ecd", h, p["down"])
+
+
+def _capacity(cfg: ModelConfig, t: int) -> int:
+    m = cfg.moe
+    return max(1, int(m.capacity_factor * m.top_k * t / m.num_experts))
+
+
+def moe_apply(p, x, cfg: ModelConfig):
+    """x [B, T, d] -> (out [B, T, d], aux_loss scalar).
+
+    GShard-style grouping: each batch row is a dispatch group, so the one-hot
+    dispatch tensor is [B, T, E, C_row] with per-row capacity — never a
+    global [B*T, E, C] (which would be petabytes at 1M tokens)."""
+    b, t, d = x.shape
+    if b > 1:
+        out, aux = jax.vmap(lambda row: _moe_group(p, row[None], cfg))(x)
+        return out[:, 0], aux.mean()
+    return _moe_group(p, x, cfg)
+
+
+def _moe_group(p, x, cfg: ModelConfig):
+    b, t, d = x.shape
+    x2d = x.reshape(b * t, d)
+    idx, gates, aux = _router(p, x2d, cfg)
+    e, k = cfg.moe.num_experts, cfg.moe.top_k
+    cap = _capacity(cfg, b * t)
+
+    onehot = jax.nn.one_hot(idx, e, dtype=jnp.float32)          # [T, k, E]
+    # position of each (token, choice) within its expert buffer
+    pos = jnp.cumsum(onehot.reshape(-1, e), axis=0).reshape(-1, k, e) - 1.0
+    pos = jnp.sum(pos * onehot, axis=-1)                         # [T, k]
+    keep = (pos < cap)
+    gates = gates * keep
+
+    if cfg.moe.dispatch == "einsum":
+        poh = jax.nn.one_hot(pos, cap, dtype=jnp.float32) * keep[..., None]
+        disp = jnp.einsum("tke,tkc->tec", onehot, poh)           # [T, E, C] 0/1
+        comb = jnp.einsum("tke,tkc,tk->tec", onehot, poh, gates)
+        xe = jnp.einsum("tec,td->ecd", disp, x2d.astype(jnp.float32)).astype(x.dtype)
+        ye = _expert_ffn(p, xe, cfg.gated_mlp)
+        out = jnp.einsum("tec,ecd->td", comb, ye.astype(jnp.float32))
+    else:  # scatter
+        flat_slot = (idx * cap + pos.astype(jnp.int32)).reshape(-1)   # [T*k]
+        safe_slot = jnp.where(keep.reshape(-1), flat_slot, e * cap)   # overflow row
+        xk = jnp.repeat(x2d.astype(jnp.float32), k, axis=0)           # [T*k, d]
+        buf = jnp.zeros((e * cap + 1, d), jnp.float32).at[safe_slot].add(xk)
+        xe = buf[: e * cap].reshape(e, cap, d).astype(x.dtype)
+        ye = _expert_ffn(p, xe, cfg.gated_mlp)
+        yk = ye.reshape(e * cap, d)[jnp.clip(flat_slot, 0, e * cap - 1)]  # [T*k, d]
+        yk = yk.astype(jnp.float32) * gates.reshape(-1, 1)
+        out = yk.reshape(b * t, k, d).sum(axis=1)
+
+    return out.reshape(b, t, d).astype(x.dtype), aux

@@ -1,0 +1,161 @@
+"""RWKV6 ("Finch") block: linear attention with data-dependent per-channel
+decay [arXiv:2404.05892].
+
+Recurrence per head (k-dim K, v-dim V):
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t
+    o_t = r_t @ (S_{t-1} + diag(u) k_t^T v_t)
+with w_t = exp(-exp(decay(x_t))) in (0,1)^K, data-dependent via a LoRA.
+
+Evaluated chunk-parallel (the standard chunked-WKV form): ``lax.scan`` over
+time chunks carrying S, intra-chunk contributions via a strictly-lower-
+triangular decay-weighted matmul. fp32 internals; chunk kept small (64) so the
+cumulative-decay ratios stay well-conditioned. The Pallas kernel in
+``repro.kernels.rwkv6_chunk`` implements the same chunk step for TPU.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.flags import analysis_chunk, scan_unroll
+from repro.models.layers import dtype_of, init_dense, rms_norm
+
+
+def _dims(cfg: ModelConfig):
+    hd = cfg.rwkv.head_dim
+    nh = cfg.d_model // hd
+    return nh, hd
+
+
+def rwkv_init(key, cfg: ModelConfig):
+    d = cfg.d_model
+    nh, hd = _dims(cfg)
+    lora = cfg.rwkv.decay_lora
+    dt = dtype_of(cfg)
+    ks = jax.random.split(key, 12)
+    return {
+        # time-mix (attention analogue)
+        "mix_r": jnp.full((d,), 0.5, dt),
+        "mix_k": jnp.full((d,), 0.5, dt),
+        "mix_v": jnp.full((d,), 0.5, dt),
+        "mix_w": jnp.full((d,), 0.5, dt),
+        "mix_g": jnp.full((d,), 0.5, dt),
+        "wr": init_dense(ks[0], d, d, dt),
+        "wk": init_dense(ks[1], d, d, dt),
+        "wv": init_dense(ks[2], d, d, dt),
+        "wg": init_dense(ks[3], d, d, dt),
+        "wo": init_dense(ks[4], d, d, dt),
+        "decay_a": init_dense(ks[5], d, lora, dt),
+        "decay_b": init_dense(ks[6], lora, d, dt),
+        "decay_base": jnp.full((d,), -4.0, jnp.float32),
+        "bonus_u": (jax.random.normal(ks[7], (nh, hd), jnp.float32) * 0.1),
+        "ln_x": jnp.zeros((d,), jnp.float32),
+        # channel-mix (FFN analogue)
+        "cmix_r": jnp.full((d,), 0.5, dt),
+        "cmix_k": jnp.full((d,), 0.5, dt),
+        "ck": init_dense(ks[8], d, cfg.d_ff, dt),
+        "cv": init_dense(ks[9], cfg.d_ff, d, dt),
+        "cr": init_dense(ks[10], d, d, dt),
+    }
+
+
+def _token_shift(x, mix, last=None):
+    """x [B,T,D]; returns lerp(x_{t-1}, x_t, mix). last: [B,1,D] carry or None."""
+    if last is None:
+        prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    else:
+        prev = jnp.concatenate([last, x[:, :-1]], axis=1)
+    return x + (prev - x) * (1.0 - mix)
+
+
+def _wkv_chunk_scan(r, k, v, w, u, s0, chunk=64):
+    """r,k,v,w: [B, T, H, D] (w in (0,1)); u: [H, D]; s0: [B, H, D, D].
+
+    Returns (o [B,T,H,D], s_T). fp32 throughout.
+    """
+    b, t, h, d = r.shape
+    # analysis mode caps unrolled trips at 32: the WKV loop is <=5% of
+    # RWKV6 flops (projections dominate), so the mild intra-chunk flop
+    # inflation from a larger analysis chunk is noise (see EXPERIMENTS.md).
+    chunk = min(analysis_chunk(chunk, t, max_trips=32), t)
+    nc = -(-t // chunk)
+    pad = nc * chunk - t
+    if pad:
+        z = ((0, 0), (0, pad), (0, 0), (0, 0))
+        r = jnp.pad(r, z)
+        k = jnp.pad(k, z)
+        v = jnp.pad(v, z)
+        w = jnp.pad(w, z, constant_values=1.0)
+
+    def to_chunks(x):
+        return x.reshape(b, nc, chunk, h, d).transpose(1, 0, 3, 2, 4)  # [N,B,H,C,D]
+
+    rc, kc, vc, wc = map(to_chunks, (r, k, v, w))
+
+    tri = jnp.tril(jnp.ones((chunk, chunk), jnp.float32), k=-1)  # strict lower
+
+    def step(s, xs):
+        rb, kb, vb, wb = xs  # [B,H,C,D]
+        logw = jnp.log(jnp.maximum(wb, 1e-12))
+        q_inc = jnp.cumsum(logw, axis=2)                    # log prod_{<=t}
+        q_exc = q_inc - logw                                # log prod_{<t}
+        # inter-chunk: o_t += (r_t * prod_{<t} w) @ S
+        r_dec = rb * jnp.exp(q_exc)
+        o = jnp.einsum("bhtd,bhde->bhte", r_dec, s)
+        # intra-chunk: scores[t,s] = sum_d r_t[d] k_s[d] exp(q_exc[t]-q_inc[s])
+        r_s = rb * jnp.exp(q_exc)
+        k_s = kb * jnp.exp(-q_inc)
+        scores = jnp.einsum("bhtd,bhsd->bhts", r_s, k_s) * tri
+        o = o + jnp.einsum("bhts,bhse->bhte", scores, vb)
+        # current-token bonus
+        cur = jnp.sum(rb * u[None, :, None, :] * kb, axis=-1, keepdims=True)
+        o = o + cur * vb
+        # state update: S' = diag(prod w) S + sum_s diag(prod_{>s} w) k_s v_s
+        total = q_inc[:, :, -1:, :]                          # [B,H,1,D]
+        k_dec = kb * jnp.exp(total - q_inc)
+        s_new = jnp.exp(total[:, :, 0, :, None]) * s + jnp.einsum(
+            "bhsd,bhse->bhde", k_dec, vb)
+        return s_new, o
+
+    step = jax.checkpoint(step, prevent_cse=False)
+    s_t, oc = jax.lax.scan(step, s0, (rc, kc, vc, wc), unroll=scan_unroll())
+    o = oc.transpose(1, 0, 3, 2, 4).reshape(b, nc * chunk, h, d)
+    return o[:, :t], s_t
+
+
+def rwkv_time_mix(p, x, cfg: ModelConfig, state=None):
+    """x [B,T,D]. state: None or {'s': [B,H,D,D], 'last': [B,1,D]}."""
+    b, t, d = x.shape
+    nh, hd = _dims(cfg)
+    last = state["last"] if state is not None else None
+    xr = _token_shift(x, p["mix_r"], last)
+    xk = _token_shift(x, p["mix_k"], last)
+    xv = _token_shift(x, p["mix_v"], last)
+    xw = _token_shift(x, p["mix_w"], last)
+    xg = _token_shift(x, p["mix_g"], last)
+
+    r = (xr @ p["wr"]).reshape(b, t, nh, hd).astype(jnp.float32)
+    k = (xk @ p["wk"]).reshape(b, t, nh, hd).astype(jnp.float32)
+    v = (xv @ p["wv"]).reshape(b, t, nh, hd).astype(jnp.float32)
+    g = jax.nn.silu((xg @ p["wg"]).astype(jnp.float32))
+    decay = p["decay_base"] + (jnp.tanh((xw @ p["decay_a"]).astype(jnp.float32))
+                               @ p["decay_b"].astype(jnp.float32))
+    w = jnp.exp(-jnp.exp(decay)).reshape(b, t, nh, hd)  # in (0,1)
+
+    s0 = state["s"] if state is not None else jnp.zeros((b, nh, hd, hd), jnp.float32)
+    o, s_t = _wkv_chunk_scan(r, k, v, w, p["bonus_u"], s0)
+    o = o.reshape(b, t, d)
+    o = rms_norm(o, p["ln_x"], eps=1e-5) * g
+    out = o.astype(x.dtype) @ p["wo"]
+    new_state = {"s": s_t, "last": x[:, -1:]}
+    return out, new_state
+
+
+def rwkv_channel_mix(p, x, state=None):
+    last = state if state is not None else None
+    xk = _token_shift(x, p["cmix_k"], last)
+    xr = _token_shift(x, p["cmix_r"], last)
+    k = jnp.square(jax.nn.relu(xk @ p["ck"]))
+    kv = k @ p["cv"]
+    return jax.nn.sigmoid((xr @ p["cr"]).astype(jnp.float32)).astype(x.dtype) * kv, x[:, -1:]

@@ -1,0 +1,4 @@
+from repro.optim.optimizers import Optimizer, adam, sgd
+from repro.optim.schedules import constant, paper_decay
+
+__all__ = ["Optimizer", "adam", "sgd", "constant", "paper_decay"]

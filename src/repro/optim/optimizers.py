@@ -1,0 +1,70 @@
+"""Minimal functional optimizers (SGD + momentum, Adam) over pytrees."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple]
+
+
+def sgd(lr, momentum: float = 0.0) -> Optimizer:
+    """``lr``: float or schedule fn step->lr."""
+    sched = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        st = {"step": jnp.zeros((), jnp.int32)}
+        if momentum:
+            st["mu"] = jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32), params)
+        return st
+
+    def update(params, state, grads):
+        eta = sched(state["step"])
+        if momentum:
+            mu = jax.tree.map(lambda m, g: momentum * m + g.astype(jnp.float32),
+                              state["mu"], grads)
+            params = jax.tree.map(lambda p, m: (p - eta * m).astype(p.dtype), params, mu)
+            return params, {"step": state["step"] + 1, "mu": mu}
+        params = jax.tree.map(lambda p, g: (p - eta * g).astype(p.dtype), params, grads)
+        return params, {"step": state["step"] + 1}
+
+    return Optimizer(init, update)
+
+
+def adam(lr, b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.0) -> Optimizer:
+    sched = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        z = lambda x: jnp.zeros_like(x, jnp.float32)
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "m": jax.tree.map(z, params),
+            "v": jax.tree.map(z, params),
+        }
+
+    def update(params, state, grads):
+        step = state["step"] + 1
+        eta = sched(step)
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+                         state["m"], grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                         state["v"], grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, m_, v_):
+            u = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (p - eta * u).astype(p.dtype)
+
+        params = jax.tree.map(upd, params, m, v)
+        return params, {"step": step, "m": m, "v": v}
+
+    return Optimizer(init, update)

@@ -1,0 +1,16 @@
+"""Learning-rate schedules. ``paper_decay`` is the paper's Appendix-B schedule
+eta_t = eta_0 / sqrt(t/10 + 1)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(eta0: float):
+    return lambda step: jnp.asarray(eta0, jnp.float32)
+
+
+def paper_decay(eta0: float, div: float = 10.0):
+    def sched(step):
+        t = jnp.asarray(step, jnp.float32)
+        return eta0 / jnp.sqrt(t / div + 1.0)
+    return sched

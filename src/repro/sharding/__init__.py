@@ -1,0 +1,19 @@
+from repro.sharding.specs import (
+    activation_sharding,
+    activation_spec,
+    infer_pytree_specs,
+    maybe_constrain,
+    set_activation_spec,
+    set_mesh,
+    spec_for_shape,
+)
+
+__all__ = [
+    "activation_sharding",
+    "activation_spec",
+    "infer_pytree_specs",
+    "maybe_constrain",
+    "set_activation_spec",
+    "set_mesh",
+    "spec_for_shape",
+]

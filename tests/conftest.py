@@ -1,0 +1,22 @@
+import os
+
+# Smoke tests and benches must see ONE device (the dry-run sets its own
+# 512-device flag in repro.launch.dryrun, which is never imported here).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import dataclasses
+
+import jax
+import pytest
+
+from repro.configs import get_config, reduced
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.PRNGKey(0)
+
+
+def reduced_f32(arch: str, **kw):
+    cfg = reduced(get_config(arch), **kw)
+    return dataclasses.replace(cfg, dtype="float32")

@@ -1,0 +1,83 @@
+"""Proposition 1 / Eq. (3): FedAvg's biased fixed point."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import FederationConfig
+from repro.core import init_fed_state, make_algorithm, make_link_process, make_round_fn
+from repro.core.bias import (
+    fedavg_client_weights,
+    fedavg_fixed_point,
+    fedavg_fixed_point_series,
+    two_client_fixed_point,
+)
+from repro.optim import sgd
+
+
+def test_series_matches_enumeration():
+    """The paper's inclusion-exclusion series == direct E[X_i/sum X] enumeration."""
+    rng = np.random.default_rng(0)
+    for m in (2, 3, 5, 7):
+        p = rng.uniform(0.05, 0.95, size=m)
+        u = rng.normal(size=(m, 3))
+        np.testing.assert_allclose(
+            fedavg_fixed_point(p, u), fedavg_fixed_point_series(p, u), rtol=1e-9)
+
+
+def test_weights_sum_to_one():
+    rng = np.random.default_rng(1)
+    for m in (2, 4, 6):
+        p = rng.uniform(0.05, 0.95, size=m)
+        w = fedavg_client_weights(p)
+        assert abs(w.sum() - 1.0) < 1e-9
+        assert (w > 0).all()
+
+
+def test_fig2_two_client_example():
+    """Fig. 2: u1=0, u2=100, p1=0.5 -> E[x] = 150 p2 / (p2 + 1)."""
+    for p2 in (0.1, 0.3, 0.5, 0.9):
+        expected = 150.0 * p2 / (p2 + 1.0)
+        got = two_client_fixed_point(0.0, 100.0, 0.5, p2)
+        np.testing.assert_allclose(got, expected, rtol=1e-9)
+        np.testing.assert_allclose(
+            fedavg_fixed_point(np.array([0.5, p2]),
+                               np.array([[0.0], [100.0]]))[0],
+            expected, rtol=1e-9)
+    # uniform p -> unbiased
+    np.testing.assert_allclose(two_client_fixed_point(0.0, 100.0, 0.5, 0.5), 50.0)
+
+
+def test_uniform_p_unbiased():
+    rng = np.random.default_rng(2)
+    m = 6
+    u = rng.normal(size=(m, 4))
+    fp = fedavg_fixed_point(np.full(m, 0.3), u)
+    np.testing.assert_allclose(fp, u.mean(0), rtol=1e-8)
+
+
+@pytest.mark.slow
+def test_fedavg_simulation_converges_to_eq3():
+    """Monte-Carlo FedAvg on quadratics lands on Eq. (3), not on x*."""
+    m, d, s = 6, 4, 30
+    rng = np.random.default_rng(3)
+    u = jnp.asarray(rng.normal(size=(m, d)))
+    p = jnp.asarray(np.linspace(0.15, 0.9, m))
+    fed = FederationConfig(algorithm="fedavg", num_clients=m, local_steps=s)
+    algo = make_algorithm(fed)
+    link = make_link_process(p, fed)
+    loss = lambda params, batch: 0.5 * jnp.sum((params["x"] - batch["u"]) ** 2)
+    opt = sgd(0.02)
+    round_fn = jax.jit(make_round_fn(loss, opt, algo, link, fed))
+    st = init_fed_state(jax.random.PRNGKey(0), {"x": jnp.zeros(d)}, fed, algo, link, opt)
+    batches = {"u": jnp.broadcast_to(u[:, None], (m, s, d))}
+    tail = []
+    for t in range(3000):
+        st, _ = round_fn(st, batches)
+        if t > 2000:
+            tail.append(np.asarray(st.server["x"]))
+    avg_tail = np.mean(tail, 0)
+    eq3 = fedavg_fixed_point(np.asarray(p), np.asarray(u))
+    x_star = np.asarray(u).mean(0)
+    # the simulated mean is far closer to Eq. (3) than to the true optimum
+    assert np.linalg.norm(avg_tail - eq3) < 0.35 * np.linalg.norm(avg_tail - x_star)

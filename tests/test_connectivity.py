@@ -1,0 +1,86 @@
+"""Unreliable-uplink schemes (paper §7.2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import FederationConfig
+from repro.core import build_base_probs, make_link_process, p_of_t
+
+
+def _empirical_rates(link, m, T=2000, seed=0):
+    state = link.init(jax.random.PRNGKey(seed))
+    key = jax.random.PRNGKey(seed + 1)
+    counts = np.zeros(m)
+    for t in range(T):
+        key, k = jax.random.split(key)
+        active, _, state = link.sample(state, jnp.int32(t), k)
+        counts += np.asarray(active)
+    return counts / T
+
+
+def test_base_prob_construction():
+    """Eq. (9): p_i = <r, nu_i> in (0, 1], clipped at delta."""
+    p, nu, r = build_base_probs(jax.random.PRNGKey(0), 100, 10,
+                                alpha=0.1, sigma0=10.0, delta=0.02)
+    assert p.shape == (100,)
+    assert (p >= 0.02 - 1e-9).all() and (p <= 1.0).all()
+    np.testing.assert_allclose(np.asarray(r).sum(), 1.0, rtol=1e-6)
+    # heavy-tailed r (sigma0=10): most mass on few classes (paper Fig. 4a)
+    assert np.sort(np.asarray(r))[-2:].sum() > 0.5
+
+
+def test_p_of_t_range():
+    p = jnp.asarray([0.5, 0.9])
+    for t in range(80):
+        pt = p_of_t(p, jnp.float32(t), gamma=0.5, period=40)
+        assert (pt >= 0).all() and (pt <= 1).all()
+    # sin completes a cycle: p back to start
+    np.testing.assert_allclose(p_of_t(p, jnp.float32(0), gamma=0.5, period=40),
+                               p_of_t(p, jnp.float32(40), gamma=0.5, period=40),
+                               rtol=1e-5)
+
+
+def test_bernoulli_rate():
+    m = 8
+    p = jnp.linspace(0.1, 0.9, m)
+    fed = FederationConfig(num_clients=m, scheme="bernoulli")
+    rates = _empirical_rates(make_link_process(p, fed), m)
+    np.testing.assert_allclose(rates, np.asarray(p), atol=0.05)
+
+
+def test_markov_stationary_rate():
+    """Table 3 transitions are built to have stationary distribution p_i."""
+    m = 6
+    p = jnp.asarray([0.1, 0.25, 0.4, 0.55, 0.7, 0.9])
+    fed = FederationConfig(num_clients=m, scheme="markov")
+    rates = _empirical_rates(make_link_process(p, fed), m, T=6000)
+    np.testing.assert_allclose(rates, np.asarray(p), atol=0.08)
+
+
+@pytest.mark.parametrize("reset", [False, True])
+def test_cyclic_duty_cycle(reset):
+    m = 5
+    p = jnp.asarray([0.2, 0.4, 0.5, 0.6, 0.8])
+    fed = FederationConfig(num_clients=m, scheme="cyclic", cyclic_length=50,
+                           cyclic_reset=reset)
+    rates = _empirical_rates(make_link_process(p, fed), m, T=4000)
+    np.testing.assert_allclose(rates, np.asarray(p), atol=0.07)
+
+
+def test_cyclic_no_reset_is_periodic():
+    """Without reset the on/off pattern repeats exactly each cycle."""
+    m, L = 4, 40
+    p = jnp.asarray([0.3, 0.5, 0.7, 0.9])
+    fed = FederationConfig(num_clients=m, scheme="cyclic", cyclic_length=L)
+    link = make_link_process(p, fed)
+    state = link.init(jax.random.PRNGKey(5))
+    key = jax.random.PRNGKey(6)
+    trace = []
+    for t in range(3 * L):
+        key, k = jax.random.split(key)
+        active, _, state = link.sample(state, jnp.int32(t), k)
+        trace.append(np.asarray(active))
+    trace = np.stack(trace)
+    np.testing.assert_array_equal(trace[:L], trace[L:2 * L])
+    np.testing.assert_array_equal(trace[:L], trace[2 * L:3 * L])

@@ -1,0 +1,140 @@
+"""Pallas kernels vs. pure-jnp oracles (interpret=True on CPU), with
+shape/dtype sweeps and hypothesis properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.ops import (
+    flash_attention,
+    flash_attention_ref,
+    gqa_flash_attention,
+    masked_agg,
+    masked_agg_pytree,
+    masked_agg_ref,
+    rwkv6_chunk,
+    rwkv6_chunk_ref,
+)
+
+
+# ---------------------------------------------------------------------------
+# masked_agg
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("m,n,dtype", [
+    (4, 128, jnp.float32), (8, 1000, jnp.float32), (16, 4097, jnp.bfloat16),
+    (3, 64, jnp.float32), (100, 257, jnp.bfloat16),
+])
+def test_masked_agg_sweep(m, n, dtype):
+    key = jax.random.PRNGKey(m * n)
+    x = jax.random.normal(key, (m, n), jnp.float32).astype(dtype)
+    mask = (jax.random.uniform(jax.random.fold_in(key, 1), (m,)) < 0.5)
+    out = masked_agg(x, mask, block_n=256)
+    ref = masked_agg_ref(x, mask)
+    tol = 1e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=tol, atol=tol)
+
+
+@given(st.integers(1, 12), st.integers(1, 300), st.integers(0, 2 ** 12 - 1))
+@settings(max_examples=25, deadline=None)
+def test_masked_agg_property(m, n, bits):
+    mask = jnp.asarray([(bits >> i) & 1 for i in range(m)], jnp.float32)
+    x = jnp.arange(m * n, dtype=jnp.float32).reshape(m, n)
+    out = masked_agg(x, mask, block_n=128)
+    ref = masked_agg_ref(x, mask)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5)
+
+
+def test_masked_agg_pytree_matches_engine():
+    from repro.core import masked_mean
+    key = jax.random.PRNGKey(7)
+    clients = {"a": jax.random.normal(key, (6, 10, 3)),
+               "b": jax.random.normal(jax.random.fold_in(key, 1), (6, 5))}
+    mask = jnp.asarray([1, 1, 0, 1, 0, 0], jnp.float32)
+    got = masked_agg_pytree(clients, mask)
+    want = masked_mean(clients, mask)
+    for k in clients:
+        np.testing.assert_allclose(np.asarray(got[k]), np.asarray(want[k]),
+                                   rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("b,h,t,d,win,cap,dtype", [
+    (2, 2, 256, 64, 0, 0.0, jnp.float32),
+    (1, 3, 256, 128, 0, 0.0, jnp.float32),
+    (1, 2, 256, 64, 128, 0.0, jnp.float32),     # sliding window
+    (1, 2, 128, 64, 0, 50.0, jnp.float32),      # gemma softcap
+    (1, 2, 256, 64, 0, 0.0, jnp.bfloat16),
+])
+def test_flash_attention_sweep(b, h, t, d, win, cap, dtype):
+    key = jax.random.PRNGKey(t + d)
+    q, k, v = (jax.random.normal(jax.random.fold_in(key, i), (b, h, t, d),
+                                 jnp.float32).astype(dtype) for i in range(3))
+    out = flash_attention(q, k, v, window=win, logit_softcap=cap)
+    ref = flash_attention_ref(q, k, v, window=win, logit_softcap=cap)
+    tol = 2e-3 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), rtol=tol, atol=tol)
+
+
+def test_gqa_wrapper():
+    key = jax.random.PRNGKey(3)
+    b, t, h, kv, d = 1, 128, 4, 2, 64
+    q = jax.random.normal(key, (b, t, h, d))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, t, kv, d))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, t, kv, d))
+    out = gqa_flash_attention(q, k, v)
+    from repro.models.attention import attention
+    ref = attention(q, k, v, kind="full", chunk=64)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=3e-3, atol=3e-3)
+
+
+# ---------------------------------------------------------------------------
+# rwkv6
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("b,h,t,d,chunk", [
+    (1, 1, 64, 64, 64), (2, 2, 128, 64, 64), (1, 2, 256, 128, 64),
+    (1, 1, 192, 64, 64),
+])
+def test_rwkv6_chunk_sweep(b, h, t, d, chunk):
+    key = jax.random.PRNGKey(b * t + d)
+    r, k, v = (0.5 * jax.random.normal(jax.random.fold_in(key, i),
+                                       (b, h, t, d), jnp.float32)
+               for i in range(3))
+    w = jnp.exp(-jnp.exp(-3.0 + 0.5 * jax.random.normal(
+        jax.random.fold_in(key, 3), (b, h, t, d))))
+    u = 0.3 * jax.random.normal(jax.random.fold_in(key, 4), (h, d))
+    s0 = 0.1 * jax.random.normal(jax.random.fold_in(key, 5), (b, h, d, d))
+    o, sT = rwkv6_chunk(r, k, v, w, u, s0, chunk=chunk)
+    oref, sref = rwkv6_chunk_ref(r, k, v, w, u, s0)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(oref), rtol=3e-3, atol=3e-3)
+    np.testing.assert_allclose(np.asarray(sT), np.asarray(sref), rtol=3e-3, atol=3e-3)
+
+
+def test_rwkv6_kernel_matches_model_path():
+    """Kernel == the model's _wkv_chunk_scan (two independent implementations)."""
+    from repro.models.rwkv import _wkv_chunk_scan
+    key = jax.random.PRNGKey(11)
+    b, h, t, d = 1, 2, 128, 64
+    r, k, v = (0.5 * jax.random.normal(jax.random.fold_in(key, i),
+                                       (b, t, h, d), jnp.float32)
+               for i in range(3))
+    w = jnp.exp(-jnp.exp(-3.0 + 0.3 * jax.random.normal(
+        jax.random.fold_in(key, 3), (b, t, h, d))))
+    u = 0.2 * jax.random.normal(jax.random.fold_in(key, 4), (h, d))
+    s0 = jnp.zeros((b, h, d, d))
+    o_model, s_model = _wkv_chunk_scan(r, k, v, w, u, s0)
+    tr = lambda x: x.transpose(0, 2, 1, 3)
+    o_kern, s_kern = rwkv6_chunk(tr(r), tr(k), tr(v), tr(w), u, s0)
+    np.testing.assert_allclose(np.asarray(tr(o_kern)), np.asarray(o_model),
+                               rtol=3e-3, atol=3e-3)
+    np.testing.assert_allclose(np.asarray(s_kern), np.asarray(s_model),
+                               rtol=3e-3, atol=3e-3)

@@ -1,0 +1,63 @@
+"""Lemma 3: ergodicity of the implicit-gossip mixing matrices."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.mixing import (
+    expected_w2,
+    lemma3_general_bound,
+    lemma3_uniform_bound,
+    mixing_matrix,
+    rho_of,
+)
+
+
+@given(st.lists(st.booleans(), min_size=1, max_size=12))
+@settings(max_examples=200, deadline=None)
+def test_mixing_matrix_doubly_stochastic(bits):
+    W = mixing_matrix(np.array(bits, bool))
+    np.testing.assert_allclose(W.sum(0), 1.0, atol=1e-12)
+    np.testing.assert_allclose(W.sum(1), 1.0, atol=1e-12)
+    assert (W >= 0).all()
+
+
+def test_w_identity_when_lone_or_empty():
+    assert (mixing_matrix(np.zeros(5, bool)) == np.eye(5)).all()
+    a = np.zeros(5, bool)
+    a[2] = True
+    assert (mixing_matrix(a) == np.eye(5)).all()
+
+
+@pytest.mark.parametrize("m,c", [(4, 0.3), (6, 0.5), (8, 0.2), (5, 0.9)])
+def test_lemma3_general_bound(m, c):
+    """rho(E[W^2]) <= 1 - c^4 (1-(1-c)^m)^2 / 8 for p_i >= c."""
+    rng = np.random.default_rng(m)
+    p = rng.uniform(c, 1.0, size=m)
+    M = expected_w2(p)
+    rho = rho_of(M)
+    assert rho < 1.0
+    assert rho <= lemma3_general_bound(c, m) + 1e-9
+
+
+def test_lemma3_uniform_bound():
+    """k-of-m uniform selection: rho <= 1 - (k/m)^2/8."""
+    import itertools
+    m, k = 6, 3
+    M = np.zeros((m, m))
+    subsets = list(itertools.combinations(range(m), k))
+    for S in subsets:
+        a = np.zeros(m, bool)
+        a[list(S)] = True
+        W = mixing_matrix(a)
+        M += W @ W
+    M /= len(subsets)
+    assert rho_of(M) <= lemma3_uniform_bound(k, m) + 1e-9
+
+
+def test_rho_decreases_with_c():
+    """Remark 2(3): larger c -> smaller rho."""
+    m = 6
+    rhos = []
+    for c in (0.1, 0.3, 0.6, 0.9):
+        rhos.append(rho_of(expected_w2(np.full(m, c))))
+    assert all(a > b for a, b in zip(rhos, rhos[1:]))

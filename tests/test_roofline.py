@@ -1,0 +1,76 @@
+"""Roofline extraction tooling: HLO collective parser, term math, body
+extrapolation — pure-function unit tests (the end-to-end path is exercised by
+launch/dryrun.py against the production meshes)."""
+import numpy as np
+
+from repro.configs import INPUT_SHAPES, get_config
+from repro.launch.dryrun import _extrapolate
+from repro.launch.roofline import (
+    HBM_BW,
+    ICI_BW,
+    PEAK_FLOPS,
+    Roofline,
+    collective_stats,
+    model_flops_for,
+)
+
+HLO = """
+ENTRY %main_spmd (p0: bf16[16,4096]) -> bf16[16,4096] {
+  %ag = bf16[256,4096]{1,0} all-gather(%p0), channel_id=1, dimensions={0}
+  %ar = f32[1024]{0} all-reduce(%x), channel_id=2, to_apply=%add
+  %rs = bf16[16,256]{1,0} reduce-scatter(%y), channel_id=3
+  %a2a = bf16[8,32]{1,0} all-to-all(%z), channel_id=4
+  %cp = f32[4,4]{1,0} collective-permute(%w), channel_id=5
+  %ag2 = (bf16[2,2]{1,0}, bf16[2,2]{1,0}) all-gather-start(%v), channel_id=6
+  %dot = bf16[16,16]{1,0} dot(%a, %b)
+}
+"""
+
+
+def test_collective_parser_kinds_and_bytes():
+    st = collective_stats(HLO)
+    assert st.count_by_kind["all-gather"] == 2
+    assert st.bytes_by_kind["all-gather"] == 256 * 4096 * 2 + 2 * (2 * 2 * 2)
+    assert st.bytes_by_kind["all-reduce"] == 1024 * 4
+    assert st.bytes_by_kind["reduce-scatter"] == 16 * 256 * 2
+    assert st.bytes_by_kind["all-to-all"] == 8 * 32 * 2
+    assert st.bytes_by_kind["collective-permute"] == 4 * 4 * 4
+    # the dot is not a collective
+    assert st.total_bytes == sum(st.bytes_by_kind.values())
+
+
+def test_roofline_terms_and_bottleneck():
+    rf = Roofline(flops=PEAK_FLOPS, hbm_bytes=HBM_BW / 2,
+                  coll_bytes=ICI_BW * 3, chips=4, model_flops=2 * PEAK_FLOPS)
+    np.testing.assert_allclose(rf.t_compute, 1.0)
+    np.testing.assert_allclose(rf.t_memory, 0.5)
+    np.testing.assert_allclose(rf.t_collective, 3.0)
+    assert rf.bottleneck == "collective"
+    np.testing.assert_allclose(rf.useful_fraction, 0.5)
+
+
+def test_extrapolation_linear_in_periods():
+    f1 = {"flops": 10.0, "bytes": 100.0,
+          "coll_bytes": {"all-gather": 4}, "coll_count": {"all-gather": 1}}
+    f2 = {"flops": 16.0, "bytes": 130.0,
+          "coll_bytes": {"all-gather": 6, "all-reduce": 2},
+          "coll_count": {"all-gather": 2, "all-reduce": 1}}
+    est = _extrapolate(f1, f2, 10)
+    np.testing.assert_allclose(est["flops"], 10 + 9 * 6)     # base + 9 bodies
+    np.testing.assert_allclose(est["bytes"], 100 + 9 * 30)
+    assert est["coll_bytes"]["all-gather"] == 4 + 9 * 2
+    assert est["coll_bytes"]["all-reduce"] == 0 + 9 * 2
+    assert est["coll_count"]["all-gather"] == 10
+
+
+def test_model_flops_modes():
+    cfg = get_config("mixtral-8x22b")
+    n = cfg.active_param_count()
+    tr = model_flops_for(cfg, INPUT_SHAPES["train_4k"], mode="train")
+    pf = model_flops_for(cfg, INPUT_SHAPES["prefill_32k"], mode="prefill")
+    dc = model_flops_for(cfg, INPUT_SHAPES["decode_32k"], mode="decode")
+    assert tr == 6.0 * n * 256 * 4096
+    assert pf == 2.0 * n * 32 * 32768
+    assert dc == 2.0 * n * 128          # one token per sequence
+    # MoE: active << total
+    assert cfg.active_param_count() < 0.35 * cfg.param_count()

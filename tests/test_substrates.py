@@ -1,0 +1,123 @@
+"""Optimizers, data pipeline, checkpointing, sharding specs."""
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpointing import latest_step, restore, save
+from repro.data import (
+    dirichlet_partition,
+    federated_classification_batches,
+    federated_lm_batches,
+    make_classification_data,
+)
+from repro.optim import adam, paper_decay, sgd
+
+
+# ---------------------------------------------------------------------------
+# optimizers
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("make_opt", [lambda: sgd(0.1), lambda: sgd(0.1, 0.9),
+                                      lambda: adam(0.05)])
+def test_optimizer_minimizes_quadratic(make_opt):
+    opt = make_opt()
+    params = {"x": jnp.asarray([3.0, -2.0])}
+    state = opt.init(params)
+    grad_fn = jax.grad(lambda p: 0.5 * jnp.sum(p["x"] ** 2))
+    for _ in range(200):
+        params, state = opt.update(params, state, grad_fn(params))
+    assert float(jnp.linalg.norm(params["x"])) < 1e-2
+
+
+def test_paper_decay_schedule():
+    s = paper_decay(0.1)
+    np.testing.assert_allclose(float(s(0)), 0.1)
+    np.testing.assert_allclose(float(s(10)), 0.1 / np.sqrt(2.0), rtol=1e-6)
+    assert float(s(1000)) < float(s(100)) < float(s(10))
+
+
+# ---------------------------------------------------------------------------
+# data
+# ---------------------------------------------------------------------------
+
+
+def test_dirichlet_partition_volumes_and_skew():
+    rng = np.random.default_rng(0)
+    x, y = make_classification_data(0)
+    idx, nu = dirichlet_partition(rng, y, num_clients=20, alpha=0.1, per_client=100)
+    assert idx.shape == (20, 100)
+    assert nu.shape == (20, 10)
+    np.testing.assert_allclose(nu.sum(1), 1.0, rtol=1e-9)
+    # alpha=0.1 -> strongly skewed: top class holds most of each client's mass
+    assert np.median(nu.max(1)) > 0.5
+
+
+def test_dirichlet_alpha_controls_heterogeneity():
+    rng = np.random.default_rng(1)
+    _, y = make_classification_data(1)
+    _, nu_lo = dirichlet_partition(rng, y, 30, 0.1, 50)
+    _, nu_hi = dirichlet_partition(rng, y, 30, 10.0, 50)
+    assert nu_lo.max(1).mean() > nu_hi.max(1).mean() + 0.2
+
+
+def test_classification_batches_shapes():
+    rng = np.random.default_rng(2)
+    x, y = make_classification_data(2)
+    idx, _ = dirichlet_partition(rng, y, 8, 0.5, 64)
+    b = federated_classification_batches(rng, x, y, idx, local_steps=3, batch_size=16)
+    assert b["x"].shape == (8, 3, 16, x.shape[1])
+    assert b["y"].shape == (8, 3, 16)
+    assert set(np.unique(b["y"])) <= set(range(10))
+
+
+def test_lm_batches_shapes():
+    rng = np.random.default_rng(3)
+    b = federated_lm_batches(rng, num_clients=4, local_steps=2, batch=2,
+                             seq=16, vocab=100)
+    assert b["tokens"].shape == (4, 2, 2, 16)
+    np.testing.assert_array_equal(b["labels"][..., :-1], b["tokens"][..., 1:])
+    assert b["tokens"].max() < 100
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(5.0), "b": {"c": jnp.ones((2, 3), jnp.bfloat16)},
+            "d": jnp.int32(7)}
+    path = str(tmp_path / "ckpt")
+    save(path, 3, tree)
+    save(path, 10, tree)
+    assert latest_step(path) == 10
+    out = restore(path, 3, tree)
+    np.testing.assert_allclose(np.asarray(out["a"]), np.arange(5.0))
+    assert out["b"]["c"].shape == (2, 3)
+    assert int(out["d"]) == 7
+
+
+# ---------------------------------------------------------------------------
+# sharding specs
+# ---------------------------------------------------------------------------
+
+
+@given(st.lists(st.sampled_from([1, 2, 3, 16, 32, 64, 256, 1024, 4096]),
+                min_size=1, max_size=4))
+@settings(max_examples=60, deadline=None)
+def test_spec_for_shape_always_valid(dims):
+    os.environ.setdefault("XLA_FLAGS", "")
+    from repro.launch.mesh import make_host_mesh
+    from repro.sharding.specs import spec_for_shape
+    mesh = make_host_mesh()
+    spec = spec_for_shape(tuple(dims), mesh)
+    assert len(spec) == len(dims)
+    for dim, ax in zip(dims, spec):
+        if ax is not None:
+            assert dim % mesh.shape[ax] == 0
