@@ -5,6 +5,11 @@ offline; the benchmarks run the same protocol (m=100 clients, Dirichlet(0.1)
 non-IID split, Eq.-9 heterogeneous p_i, 5 local steps, decaying LR) on the
 synthetic 10-class Gaussian task from ``repro.data.synthetic`` with a 2-layer
 MLP. Scale knobs (--rounds, --clients) trade fidelity for CPU time.
+
+Training runs on the scanned multi-round engine: the dataset and the
+per-client index table live on device (``repro.data.classification_source``)
+and ``eval_every`` rounds execute as ONE ``run_rounds`` dispatch, so the
+scheme x algorithm sweeps are no longer bounded by per-round Python dispatch.
 """
 from __future__ import annotations
 
@@ -20,11 +25,11 @@ from repro.core import (
     init_fed_state,
     make_algorithm,
     make_link_process,
-    make_round_fn,
+    make_run_rounds,
 )
 from repro.data import (
+    classification_source,
     dirichlet_partition,
-    federated_classification_batches,
     make_classification_data,
 )
 from repro.optim import paper_decay, sgd
@@ -84,18 +89,21 @@ def run_training(algo_name, scheme_key, *, rounds=300, m=100, seed=0,
     algo = make_algorithm(fed)
     link = make_link_process(p, fed)
     opt = sgd(paper_decay(0.1))
-    rf = jax.jit(make_round_fn(mlp_loss, opt, algo, link, fed))
+    source = classification_source(x, y, idx, local_steps=5, batch_size=32)
+    run_rounds = make_run_rounds(mlp_loss, opt, algo, link, fed, source)
     params = mlp_init(jax.random.PRNGKey(seed + 1))
     st = init_fed_state(jax.random.PRNGKey(seed + 2), params, fed, algo, link, opt)
+    ds_state = source.init(jax.random.PRNGKey(seed + 3))
+    data_key = jax.random.PRNGKey(seed + 4)
     xt_j, yt_j = jnp.asarray(xt), jnp.asarray(yt)
     x_j, y_j = jnp.asarray(x), jnp.asarray(y)
     traj = []
-    for t in range(rounds):
-        b = federated_classification_batches(rng, x, y, idx,
-                                             local_steps=5, batch_size=32)
-        st, _ = rf(st, {"x": jnp.asarray(b["x"]), "y": jnp.asarray(b["y"])})
-        if (t + 1) % eval_every == 0 or t == rounds - 1:
-            traj.append((t + 1, accuracy(st.server, xt_j, yt_j)))
+    t = 0
+    while t < rounds:
+        chunk = min(eval_every, rounds - t)
+        st, ds_state, _ = run_rounds(st, ds_state, data_key, chunk)
+        t += chunk
+        traj.append((t, accuracy(st.server, xt_j, yt_j)))
     train_acc = accuracy(st.server, x_j, y_j)
     return traj, train_acc
 

@@ -11,7 +11,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import FederationConfig
-from repro.core import init_fed_state, make_algorithm, make_link_process, make_round_fn
+from repro.core import init_fed_state, make_algorithm, make_link_process, make_run_rounds
+from repro.data import fixed_source
 from repro.optim import sgd
 
 
@@ -25,15 +26,20 @@ def run_one(algo_name, p0, p1, *, m, d, s, rounds, eta, seed):
     link = make_link_process(p, fed)
     loss = lambda params, batch: 0.5 * jnp.sum((params["x"] - batch["u"]) ** 2)
     opt = sgd(eta)
-    rf = jax.jit(make_round_fn(loss, opt, algo, link, fed))
+    source = fixed_source({"u": jnp.broadcast_to(u[:, None], (m, s, d))})
+    run_rounds = make_run_rounds(loss, opt, algo, link, fed, source)
     st = init_fed_state(jax.random.PRNGKey(seed + 1), {"x": jnp.zeros(d)},
                         fed, algo, link, opt)
-    batches = {"u": jnp.broadcast_to(u[:, None], (m, s, d))}
-    dists = []
-    for t in range(rounds):
-        st, _ = rf(st, batches)
-        if (t + 1) % max(rounds // 20, 1) == 0:
-            dists.append((t + 1, float(jnp.linalg.norm(st.server["x"] - x_star))))
+    ds_state = source.init(jax.random.PRNGKey(seed + 2))
+    data_key = jax.random.PRNGKey(seed + 3)
+    # 20 measurement points = 20 scan chunks instead of `rounds` dispatches
+    chunk = max(rounds // 20, 1)
+    dists, t = [], 0
+    while t < rounds:
+        step = min(chunk, rounds - t)
+        st, ds_state, _ = run_rounds(st, ds_state, data_key, step)
+        t += step
+        dists.append((t, float(jnp.linalg.norm(st.server["x"] - x_star))))
     return dists
 
 

@@ -13,7 +13,8 @@ import time
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="fig2|fig3|table1|table2|fig8|roofline|kernels")
+                    help="fig2|fig3|table1|table2|fig8|extensions|throughput|"
+                         "roofline|kernels")
     ap.add_argument("--rounds", type=int, default=250)
     args = ap.parse_args()
 
@@ -26,6 +27,7 @@ def main() -> None:
         roofline,
         table1_accuracy,
         table2_rounds_to_target,
+        throughput,
     )
 
     suites = {
@@ -35,6 +37,7 @@ def main() -> None:
         "table2": lambda: table2_rounds_to_target.run(rounds=args.rounds),
         "fig8": lambda: fig8_ablations.run(rounds=max(args.rounds // 2, 100)),
         "extensions": lambda: extensions.run(rounds=args.rounds),
+        "throughput": lambda: throughput.run(rounds=max(args.rounds, 200)),
         "roofline": lambda: roofline.run(),
         "kernels": lambda: kernels_bench.run(),
     }

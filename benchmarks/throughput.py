@@ -1,0 +1,123 @@
+"""Round-throughput: scanned multi-round engine vs per-round dispatch.
+
+Measures wall-clock for the acceptance workload (m=32 clients, synthetic
+2-layer MLP, 200 rounds, bernoulli links) on two execution paths sharing the
+same jit-ed round step and the same device-resident ``DataSource``:
+
+- ``loop``: one dispatch per round from Python (``run_rounds_loop``) — the
+  pre-refactor execution model;
+- ``scan``: all rounds inside one ``jax.lax.scan`` (``make_run_rounds``).
+
+Prints a ``BENCH {...}`` JSON line and writes it to
+``benchmarks/out/throughput.json``. The refactor's acceptance bar is
+``speedup >= 2``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import FederationConfig
+from repro.core import (
+    build_base_probs,
+    init_fed_state,
+    make_algorithm,
+    make_link_process,
+    make_round_fn,
+    make_round_step,
+    make_run_rounds,
+    run_rounds_loop,
+)
+from repro.data import classification_source, dirichlet_partition, make_classification_data
+from repro.optim import paper_decay, sgd
+
+from benchmarks.common import mlp_init, mlp_loss
+
+
+def _setup(m, seed):
+    rng = np.random.default_rng(seed)
+    x, y = make_classification_data(seed, dim=32, n_per_class=600, sep=3.0)
+    idx, _ = dirichlet_partition(rng, y, m, alpha=0.1, per_client=64)
+    fed = FederationConfig(algorithm="fedpbc", num_clients=m, local_steps=5)
+    p, _, _ = build_base_probs(jax.random.PRNGKey(seed), m, 10)
+    algo = make_algorithm(fed)
+    link = make_link_process(p, fed)
+    opt = sgd(paper_decay(0.1))
+    source = classification_source(x, y, idx, local_steps=5, batch_size=32)
+
+    def init_states(seed):
+        params = mlp_init(jax.random.PRNGKey(seed + 1))
+        st = init_fed_state(jax.random.PRNGKey(seed + 2), params, fed, algo,
+                            link, opt)
+        return st, source.init(jax.random.PRNGKey(seed + 3))
+
+    return fed, algo, link, opt, source, init_states
+
+
+def run(csv=True, *, rounds=200, m=32, seed=0, out_path=None):
+    fed, algo, link, opt, source, init_states = _setup(m, seed)
+    data_key = jax.random.PRNGKey(seed + 4)
+    round_fn = make_round_fn(mlp_loss, opt, algo, link, fed)
+    # one jitted step shared by warm-up and timed run, so the timed region
+    # measures dispatch only (a fresh closure would recompile inside it)
+    step = jax.jit(make_round_step(round_fn, source))
+    run_rounds = make_run_rounds(mlp_loss, opt, algo, link, fed, source)
+
+    # warm up both compile caches on the measured shapes, then time fresh runs
+    st, ds = init_states(seed)
+    st, ds, _ = run_rounds_loop(st, ds, data_key, 2, round_fn=round_fn,
+                                source=source, step=step)
+    st, ds = init_states(seed)
+    run_rounds(st, ds, data_key, rounds)
+
+    st, ds = init_states(seed)
+    t0 = time.perf_counter()
+    st, ds, mets = run_rounds_loop(st, ds, data_key, rounds,
+                                   round_fn=round_fn, source=source, step=step)
+    jax.block_until_ready(st.server)
+    loop_s = time.perf_counter() - t0
+    loop_loss = float(mets["loss"][-1])
+
+    st, ds = init_states(seed)
+    t0 = time.perf_counter()
+    st, ds, mets = run_rounds(st, ds, data_key, rounds)
+    jax.block_until_ready(st.server)
+    scan_s = time.perf_counter() - t0
+    scan_loss = float(mets["loss"][-1])
+
+    result = {
+        "bench": "round_throughput",
+        "m": m,
+        "rounds": rounds,
+        "local_steps": 5,
+        "model": "mlp_32x64x10",
+        "loop_seconds": round(loop_s, 4),
+        "scan_seconds": round(scan_s, 4),
+        "loop_rounds_per_s": round(rounds / loop_s, 2),
+        "scan_rounds_per_s": round(rounds / scan_s, 2),
+        "speedup": round(loop_s / scan_s, 2),
+        "final_loss_loop": round(loop_loss, 6),
+        "final_loss_scan": round(scan_loss, 6),
+        "backend": jax.default_backend(),
+    }
+    print("BENCH " + json.dumps(result), flush=True)
+    if out_path is None:
+        out_path = os.path.join(os.path.dirname(__file__), "out",
+                                "throughput.json")
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(result, f, indent=2)
+    return result
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=200)
+    ap.add_argument("--clients", type=int, default=32)
+    a = ap.parse_args()
+    run(rounds=a.rounds, m=a.clients)

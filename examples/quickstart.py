@@ -4,14 +4,19 @@ Two client populations with very different uplink probabilities (0.9 vs 0.1).
 FedAvg converges to a biased point (Prop. 1); FedPBC's postponed broadcast
 (implicit gossiping) removes the bias.
 
+All 400 rounds run as ONE device dispatch: ``fixed_source`` holds the batch
+on device and ``make_run_rounds`` scans the round function (see README,
+"Multi-round scan engine").
+
   PYTHONPATH=src python examples/quickstart.py
 """
 import jax
 import jax.numpy as jnp
 
 from repro.configs import FederationConfig
-from repro.core import init_fed_state, make_algorithm, make_link_process, make_round_fn
+from repro.core import init_fed_state, make_algorithm, make_link_process, make_run_rounds
 from repro.core.bias import fedavg_fixed_point
+from repro.data import fixed_source
 from repro.optim import sgd
 
 M, D, S, ROUNDS, ETA = 20, 16, 10, 400, 2e-3
@@ -28,12 +33,13 @@ def run(algorithm: str) -> float:
     link = make_link_process(p, fed)
     loss = lambda params, batch: 0.5 * jnp.sum((params["x"] - batch["u"]) ** 2)
     opt = sgd(ETA)
-    round_fn = jax.jit(make_round_fn(loss, opt, algo, link, fed))
+    source = fixed_source({"u": jnp.broadcast_to(u[:, None], (M, S, D))})
+    run_rounds = make_run_rounds(loss, opt, algo, link, fed, source)
     state = init_fed_state(jax.random.PRNGKey(1), {"x": jnp.zeros(D)},
                            fed, algo, link, opt)
-    batches = {"u": jnp.broadcast_to(u[:, None], (M, S, D))}
-    for _ in range(ROUNDS):
-        state, _ = round_fn(state, batches)
+    state, _, metrics = run_rounds(state, source.init(jax.random.PRNGKey(2)),
+                                   jax.random.PRNGKey(3), ROUNDS)
+    assert metrics["loss"].shape == (ROUNDS,)       # stacked per-round metrics
     return float(jnp.linalg.norm(state.server["x"] - x_star))
 
 

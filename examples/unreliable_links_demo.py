@@ -1,5 +1,9 @@
 """Fig. 5/6 analogue: ASCII traces of the six unreliable-uplink schemes.
 
+The whole T-round trace of each scheme is produced by one ``jax.lax.scan``
+over ``link.sample`` — the same device-side pattern the multi-round engine
+uses — instead of T Python-loop dispatches.
+
   PYTHONPATH=src python examples/unreliable_links_demo.py
 """
 import jax
@@ -22,18 +26,27 @@ SCHEMES = [
 P = jnp.asarray([0.05, 0.1, 0.5, 0.9])
 T = 80
 
+
+def trace(link, T: int, key) -> np.ndarray:
+    """[T, m] bool activity matrix from a single scanned dispatch."""
+
+    def body(carry, t):
+        state, key = carry
+        key, k = jax.random.split(key)
+        active, _, state = link.sample(state, t, k)
+        return (state, key), active
+
+    init = (link.init(jax.random.PRNGKey(0)), key)
+    _, actives = jax.lax.scan(body, init, jnp.arange(T, dtype=jnp.int32))
+    return np.asarray(actives)
+
+
 if __name__ == "__main__":
     for name, kw in SCHEMES:
         fed = FederationConfig(num_clients=len(P), **kw)
         link = make_link_process(P, fed)
-        state = link.init(jax.random.PRNGKey(0))
-        key = jax.random.PRNGKey(1)
-        rows = [[] for _ in P]
-        for t in range(T):
-            key, k = jax.random.split(key)
-            active, p_t, state = link.sample(state, jnp.int32(t), k)
-            for i, a in enumerate(np.asarray(active)):
-                rows[i].append("#" if a else ".")
+        actives = trace(link, T, jax.random.PRNGKey(1))
         print(f"\n== {name} ==")
-        for i, r in enumerate(rows):
-            print(f"  p={float(P[i]):4.2f} |{''.join(r)}|")
+        for i in range(len(P)):
+            row = "".join("#" if a else "." for a in actives[:, i])
+            print(f"  p={float(P[i]):4.2f} |{row}|")

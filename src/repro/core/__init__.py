@@ -6,7 +6,16 @@ from repro.core.connectivity import (
     make_link_process,
     p_of_t,
 )
-from repro.core.federated import FedState, init_fed_state, local_steps, make_round_fn
+from repro.core.federated import (
+    DEFAULT_METRIC_KEYS,
+    FedState,
+    init_fed_state,
+    local_steps,
+    make_round_fn,
+    make_round_step,
+    make_run_rounds,
+    run_rounds_loop,
+)
 
 __all__ = [
     "ALGORITHMS",
@@ -17,8 +26,12 @@ __all__ = [
     "build_base_probs",
     "make_link_process",
     "p_of_t",
+    "DEFAULT_METRIC_KEYS",
     "FedState",
     "init_fed_state",
     "local_steps",
     "make_round_fn",
+    "make_round_step",
+    "make_run_rounds",
+    "run_rounds_loop",
 ]

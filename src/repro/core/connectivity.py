@@ -99,8 +99,15 @@ def markov_process(p_base, cfg: FederationConfig) -> LinkProcess:
 
 def cyclic_process(p_base, cfg: FederationConfig) -> LinkProcess:
     """Fig. 5: link active for p_i*L of every cycle of length L, after a random
-    offset drawn once (no reset) or redrawn every cycle (periodic reset)."""
+    offset drawn once (no reset) or redrawn every cycle (periodic reset).
+
+    The on/off windows are structural (driven by ``p_base`` duty cycles), but
+    the reported connection probability follows bernoulli/markov semantics:
+    time-varying configs report ``p_of_t`` so known-p algorithms see the same
+    signal across schemes.
+    """
     L = cfg.cyclic_length
+    tv = cfg.time_varying
 
     def init(key):
         off = jax.random.uniform(key, p_base.shape) * (1.0 - p_base) * L
@@ -115,7 +122,8 @@ def cyclic_process(p_base, cfg: FederationConfig) -> LinkProcess:
         else:
             off = state["offset"]
         active = (phase >= off) & (phase < off + p_base * L)
-        return active, p_base, state
+        p_t = p_of_t(p_base, t, gamma=cfg.gamma, period=cfg.period) if tv else p_base
+        return active, p_t, state
 
     return LinkProcess(init, sample, f"cyclic_{'reset' if cfg.cyclic_reset else 'noreset'}")
 

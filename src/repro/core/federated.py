@@ -11,6 +11,16 @@ A round (Alg. 1 of the paper) is one pure, jit-able function:
 
 The engine is model-agnostic: the caller provides ``loss_fn(params, batch)``
 and a per-client batch pytree with a leading ``[m, ...]`` axis.
+
+Two execution modes share the same single-round primitive:
+
+- ``round_fn(state, batches)`` — one round per dispatch, the composable
+  building block (callers feed host- or device-generated batches);
+- ``run_rounds(state, ds_state, data_key, num_rounds)`` — K rounds inside ONE
+  ``jax.lax.scan`` over a device-resident ``DataSource``
+  (``repro.data.sources``), with donated state buffers and stacked per-round
+  metrics. This removes the per-round dispatch + H2D cost that dominates
+  long-horizon simulations (thousands of rounds x many link schemes).
 """
 from __future__ import annotations
 
@@ -119,6 +129,95 @@ def make_round_fn(loss_fn: Callable, optimizer, algorithm: Algorithm,
         return new_state, metrics
 
     return round_fn
+
+
+# ---------------------------------------------------------------------------
+# Multi-round scan engine
+# ---------------------------------------------------------------------------
+
+# Metrics stacked per round by run_rounds. "active" ([K, m] bool) is cheap but
+# redundant with staleness for most consumers; callers opt in via metric_keys.
+DEFAULT_METRIC_KEYS = ("loss", "num_active", "staleness")
+
+
+def make_round_step(round_fn, source):
+    """One (sample batch -> run round) step over a ``DataSource``.
+
+    The per-round data key is ``fold_in(data_key, state.round)`` — a pure
+    function of the carried round counter — so the scanned engine and a
+    sequential Python loop over this very function draw identical batches.
+    Returns ``step(state, ds_state, data_key) -> (state, ds_state, metrics)``.
+    """
+
+    def step(state: FedState, ds_state, data_key):
+        k_data = jax.random.fold_in(data_key, state.round)
+        batches, ds_state = source.sample(ds_state, state.round, k_data)
+        state, metrics = round_fn(state, batches)
+        return state, ds_state, metrics
+
+    return step
+
+
+def make_run_rounds(loss_fn: Callable, optimizer, algorithm: Algorithm,
+                    link: LinkProcess, fed_cfg: FederationConfig, source,
+                    spmd_axis_name: Optional[str] = None,
+                    metric_keys=DEFAULT_METRIC_KEYS,
+                    donate: Optional[bool] = None):
+    """Build the scanned multi-round entry point.
+
+    Returns ``run_rounds(state, ds_state, data_key, num_rounds)`` →
+    ``(state', ds_state', metrics)`` where every entry of ``metrics`` is a
+    device array with a leading ``[num_rounds]`` axis (e.g. ``loss [K]``,
+    ``staleness [K, m]``). ``num_rounds`` is static (one compile per distinct
+    chunk length); ``state``/``ds_state`` buffers are donated on backends that
+    support donation, so chunked callers can loop
+    ``state, ds_state, mets = run_rounds(state, ds_state, key, chunk)``
+    without doubling peak memory.
+    """
+    round_fn = make_round_fn(loss_fn, optimizer, algorithm, link, fed_cfg,
+                             spmd_axis_name)
+    step = make_round_step(round_fn, source)
+    if donate is None:
+        donate = jax.default_backend() != "cpu"  # CPU ignores donation noisily
+
+    def run_rounds(state: FedState, ds_state, data_key, num_rounds: int):
+        def body(carry, _):
+            st, ds = carry
+            st, ds, metrics = step(st, ds, data_key)
+            return (st, ds), {k: metrics[k] for k in metric_keys}
+
+        # unroll=1 always: num_rounds can be in the thousands, and the
+        # analysis-mode full unroll (repro.models.flags) is for layer stacks,
+        # not the round loop.
+        (state, ds_state), metrics = jax.lax.scan(
+            body, (state, ds_state), None, length=num_rounds)
+        return state, ds_state, metrics
+
+    return jax.jit(run_rounds, static_argnums=(3,),
+                   donate_argnums=(0, 1) if donate else ())
+
+
+def run_rounds_loop(state: FedState, ds_state, data_key, num_rounds: int, *,
+                    round_fn, source, metric_keys=DEFAULT_METRIC_KEYS,
+                    step=None):
+    """Sequential reference: the SAME step as the scanned engine, dispatched
+    once per round from Python. Used by the equivalence tests and as the
+    baseline of ``benchmarks/throughput.py``; prefer ``make_run_rounds`` for
+    real work.
+
+    ``step``: pass a prebuilt ``jax.jit(make_round_step(round_fn, source))``
+    to reuse its compile cache across calls (each default-built closure gets
+    its own cache entry)."""
+    if step is None:
+        step = jax.jit(make_round_step(round_fn, source))
+    collected = []
+    for _ in range(num_rounds):
+        state, ds_state, metrics = step(state, ds_state, data_key)
+        collected.append({k: metrics[k] for k in metric_keys})
+    stacked = {
+        k: jnp.stack([m[k] for m in collected]) for k in metric_keys
+    } if collected else {k: jnp.zeros((0,)) for k in metric_keys}
+    return state, ds_state, stacked
 
 
 jax.tree_util.register_dataclass(

@@ -1,4 +1,10 @@
 from repro.data.partition import dirichlet_partition
+from repro.data.sources import (
+    DataSource,
+    classification_source,
+    fixed_source,
+    lm_source,
+)
 from repro.data.synthetic import (
     federated_classification_batches,
     federated_lm_batches,
@@ -10,4 +16,8 @@ __all__ = [
     "make_classification_data",
     "federated_classification_batches",
     "federated_lm_batches",
+    "DataSource",
+    "classification_source",
+    "fixed_source",
+    "lm_source",
 ]

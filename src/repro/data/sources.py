@@ -1,0 +1,104 @@
+"""Device-resident data sources for the multi-round scan engine.
+
+A ``DataSource`` is the functional counterpart of the host-side batch
+generators in ``repro.data.synthetic``: the full dataset (or the generator's
+parameters) lives on device, and one round's per-client batches are sampled
+*inside* the jit program::
+
+    sample(ds_state, round, key) -> (batches, ds_state)
+
+``batches`` is the pytree ``round_fn`` expects — leading ``[m, s, ...]`` axes
+(per client, per local step). Because sampling is pure and device-side, K
+rounds can run under a single ``jax.lax.scan`` (``repro.core.federated
+.run_rounds``) with no per-round host dispatch or H2D transfer.
+
+Sources that need no evolving state return ``ds_state`` unchanged (an empty
+tuple); randomness comes from the per-round ``key`` the engine derives via
+``fold_in(data_key, round)``, so trajectories are reproducible and identical
+between the scanned and sequential paths.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+@dataclass(frozen=True)
+class DataSource:
+    init: Callable[..., Any]      # (key) -> ds_state
+    sample: Callable[..., Any]    # (ds_state, round, key) -> (batches, ds_state)
+    name: str = ""
+
+
+def classification_source(x, y, client_idx, *, local_steps: int,
+                          batch_size: int) -> DataSource:
+    """Device-resident sampler over a partitioned classification dataset.
+
+    ``x [n, ...]``, ``y [n]`` and ``client_idx [m, per_client]`` are captured
+    as jit constants; each round draws ``[m, s, b]`` examples with replacement
+    from every client's shard (same distribution as the host-side
+    ``federated_classification_batches``).
+    """
+    x = jnp.asarray(x)
+    y = jnp.asarray(y)
+    client_idx = jnp.asarray(client_idx)
+    m, per_client = client_idx.shape
+
+    def init(key):
+        return ()
+
+    def sample(ds_state, t, key):
+        pick = jax.random.randint(
+            key, (m, local_steps, batch_size), 0, per_client)
+        sel = client_idx[jnp.arange(m)[:, None, None], pick]
+        return {"x": x[sel], "y": y[sel]}, ds_state
+
+    return DataSource(init, sample, "classification")
+
+
+def lm_source(*, num_clients: int, local_steps: int, batch: int, seq: int,
+              vocab: int, client_shift: bool = True,
+              memory_shape: Optional[Tuple[int, ...]] = None) -> DataSource:
+    """Synthetic non-IID token streams generated on device.
+
+    Mirrors ``federated_lm_batches``: each client draws tokens from its own
+    half-vocab slice (offset drawn once at ``init``). ``memory_shape`` appends
+    a constant ``memory`` leaf of shape ``[m, s, *memory_shape]`` for
+    vlm/audio model families.
+    """
+    m, s = num_clients, local_steps
+
+    def init(key):
+        lo = (jax.random.randint(key, (m,), 0, vocab // 2)
+              if client_shift else jnp.zeros((m,), jnp.int32))
+        return {"lo": lo.astype(jnp.int32)}
+
+    def sample(ds_state, t, key):
+        toks = ds_state["lo"][:, None, None, None] + jax.random.randint(
+            key, (m, s, batch, seq), 0, vocab // 2)
+        toks = toks.astype(jnp.int32)
+        batches = {"tokens": toks, "labels": jnp.roll(toks, -1, axis=-1)}
+        if memory_shape is not None:
+            batches["memory"] = 0.1 * jnp.ones((m, s) + tuple(memory_shape))
+        return batches, ds_state
+
+    return DataSource(init, sample, "lm")
+
+
+def fixed_source(batches: Pytree) -> DataSource:
+    """Every round sees the same ``[m, s, ...]`` batch pytree (the quadratic
+    counterexample setups, where each client's objective is deterministic)."""
+    batches = jax.tree.map(jnp.asarray, batches)
+
+    def init(key):
+        return ()
+
+    def sample(ds_state, t, key):
+        return batches, ds_state
+
+    return DataSource(init, sample, "fixed")

@@ -5,7 +5,13 @@
 
 Runs the FedPBC round engine over the selected architecture on the local
 devices (reduced configs on CPU; full configs are exercised via dryrun.py).
-Checkpoints the FedState every --ckpt-every rounds.
+
+Rounds execute on the scanned engine (``repro.core.make_run_rounds``): token
+batches are sampled on device by ``repro.data.lm_source`` and every
+log/checkpoint interval runs as ONE dispatch (``jax.lax.scan`` over the round
+function), instead of one dispatch + host batch upload per round.
+Checkpoints carry the full ``{fed, ds}`` state every --ckpt-every rounds, so
+a restore resumes mid-sweep with the identical trajectory.
 """
 from __future__ import annotations
 
@@ -33,6 +39,7 @@ def main():
     ap.add_argument("--lr", type=float, default=5e-3)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -46,9 +53,9 @@ def main():
         init_fed_state,
         make_algorithm,
         make_link_process,
-        make_round_fn,
+        make_run_rounds,
     )
-    from repro.data import federated_lm_batches
+    from repro.data import lm_source
     from repro.models.model import init_params, loss_fn
     from repro.optim import paper_decay, sgd
 
@@ -72,41 +79,56 @@ def main():
     def loss(params, batch):
         return loss_fn(params, cfg, batch, remat=False)
 
-    rf = jax.jit(make_round_fn(loss, opt, algo, link, fed))
+    if cfg.family == "vlm":
+        memory_shape = (args.batch, cfg.num_image_tokens, cfg.d_model)
+    elif cfg.family == "audio":
+        memory_shape = (args.batch, cfg.num_audio_frames, cfg.d_model)
+    else:
+        memory_shape = None
+    source = lm_source(num_clients=m, local_steps=args.local_steps,
+                       batch=args.batch, seq=args.seq, vocab=cfg.vocab_size,
+                       memory_shape=memory_shape)
+
+    run_rounds = make_run_rounds(loss, opt, algo, link, fed, source)
     params = init_params(jax.random.PRNGKey(args.seed + 1), cfg)
     st = init_fed_state(jax.random.PRNGKey(args.seed + 2), params, fed,
                         algo, link, opt)
+    ds_state = source.init(jax.random.PRNGKey(args.seed + 3))
+    data_key = jax.random.PRNGKey(args.seed + 4)
 
     if args.ckpt_dir:
         last = latest_step(args.ckpt_dir)
         if last is not None:
-            st = restore(args.ckpt_dir, last, st)
+            try:
+                st, ds_state = restore(args.ckpt_dir, last, (st, ds_state))
+            except (KeyError, AssertionError) as e:
+                raise SystemExit(
+                    f"checkpoint {args.ckpt_dir}/ckpt_{last:08d}.npz does not "
+                    "match the current (FedState, ds_state) layout — likely a "
+                    "pre-scan-engine checkpoint (FedState only) or a different "
+                    f"--arch/--clients setting. Delete or move --ckpt-dir to "
+                    f"start fresh. ({e})")
             print(f"restored round {int(st.round)} from {args.ckpt_dir}")
 
-    rng = np.random.default_rng(args.seed)
+    def next_boundary(t: int) -> int:
+        """Next log or checkpoint boundary after round t (scan chunk end)."""
+        nxt = min(t - t % args.log_every + args.log_every, args.rounds)
+        if args.ckpt_dir:
+            nxt = min(nxt, t - t % args.ckpt_every + args.ckpt_every)
+        return nxt
+
     t0 = time.time()
-    start_round = int(st.round)
-    for t in range(start_round, args.rounds):
-        b = federated_lm_batches(rng, num_clients=m,
-                                 local_steps=args.local_steps,
-                                 batch=args.batch, seq=args.seq,
-                                 vocab=cfg.vocab_size)
-        batch = {"tokens": jnp.asarray(b["tokens"]),
-                 "labels": jnp.asarray(b["labels"])}
-        if cfg.family == "vlm":
-            batch["memory"] = 0.1 * jnp.ones(
-                (m, args.local_steps, args.batch, cfg.num_image_tokens, cfg.d_model))
-        elif cfg.family == "audio":
-            batch["memory"] = 0.1 * jnp.ones(
-                (m, args.local_steps, args.batch, cfg.num_audio_frames, cfg.d_model))
-        st, mets = rf(st, batch)
-        if (t + 1) % 10 == 0 or t == start_round:
-            print(f"round {t + 1:4d} loss {float(mets['loss']):.4f} "
-                  f"active {int(mets['num_active'])}/{m} "
-                  f"mean_staleness {float(np.mean(mets['staleness'])):.1f} "
-                  f"({(time.time() - t0):.1f}s)", flush=True)
-        if args.ckpt_dir and (t + 1) % args.ckpt_every == 0:
-            save(args.ckpt_dir, t + 1, st)
+    start_round = t = int(st.round)
+    while t < args.rounds:
+        chunk = next_boundary(t) - t
+        st, ds_state, mets = run_rounds(st, ds_state, data_key, chunk)
+        t += chunk
+        print(f"round {t:4d} loss {float(mets['loss'][-1]):.4f} "
+              f"active {int(mets['num_active'][-1])}/{m} "
+              f"mean_staleness {float(np.mean(mets['staleness'][-1])):.1f} "
+              f"({(time.time() - t0):.1f}s)", flush=True)
+        if args.ckpt_dir and t % args.ckpt_every == 0:
+            save(args.ckpt_dir, t, (st, ds_state))
     print(f"done: {args.rounds - start_round} rounds in {time.time() - t0:.1f}s")
 
 

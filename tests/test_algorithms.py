@@ -3,7 +3,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # bare image: fall back to seeded-random example cases
+    HAVE_HYPOTHESIS = False
 
 from repro.configs import FederationConfig
 from repro.core import (
@@ -19,9 +24,7 @@ from repro.optim import sgd
 ALGOS = list(ALGORITHMS)
 
 
-@given(st.integers(2, 10), st.integers(0, 2 ** 10 - 1))
-@settings(max_examples=60, deadline=None)
-def test_masked_mean_property(m, bits):
+def _check_masked_mean(m, bits):
     mask = jnp.asarray([(bits >> i) & 1 for i in range(m)], jnp.float32)
     x = {"a": jnp.arange(m * 3, dtype=jnp.float32).reshape(m, 3),
          "b": jnp.ones((m, 2, 2))}
@@ -33,6 +36,27 @@ def test_masked_mean_property(m, bits):
         np.testing.assert_allclose(out["b"], 1.0)
     else:
         np.testing.assert_allclose(out["a"], 0.0)
+
+
+if HAVE_HYPOTHESIS:
+
+    @given(st.integers(2, 10), st.integers(0, 2 ** 10 - 1))
+    @settings(max_examples=60, deadline=None)
+    def test_masked_mean_property(m, bits):
+        _check_masked_mean(m, bits)
+
+else:
+    _rng = np.random.default_rng(0)
+    _CASES = (
+        # edge cases hypothesis would shrink to: empty mask, full mask
+        [(2, 0), (10, 0), (2, 3), (10, 2 ** 10 - 1)]
+        + [(int(_rng.integers(2, 11)), int(_rng.integers(0, 2 ** 10)))
+           for _ in range(56)]
+    )
+
+    @pytest.mark.parametrize("m,bits", _CASES)
+    def test_masked_mean_property(m, bits):
+        _check_masked_mean(m, bits)
 
 
 def test_bcast_where():

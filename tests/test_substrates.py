@@ -6,7 +6,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # bare image: fall back to seeded-random example cases
+    HAVE_HYPOTHESIS = False
 
 from repro.checkpointing import latest_step, restore, save
 from repro.data import (
@@ -108,10 +113,7 @@ def test_checkpoint_roundtrip(tmp_path):
 # ---------------------------------------------------------------------------
 
 
-@given(st.lists(st.sampled_from([1, 2, 3, 16, 32, 64, 256, 1024, 4096]),
-                min_size=1, max_size=4))
-@settings(max_examples=60, deadline=None)
-def test_spec_for_shape_always_valid(dims):
+def _check_spec_for_shape(dims):
     os.environ.setdefault("XLA_FLAGS", "")
     from repro.launch.mesh import make_host_mesh
     from repro.sharding.specs import spec_for_shape
@@ -121,3 +123,25 @@ def test_spec_for_shape_always_valid(dims):
     for dim, ax in zip(dims, spec):
         if ax is not None:
             assert dim % mesh.shape[ax] == 0
+
+
+_SPEC_DIMS = [1, 2, 3, 16, 32, 64, 256, 1024, 4096]
+
+if HAVE_HYPOTHESIS:
+
+    @given(st.lists(st.sampled_from(_SPEC_DIMS), min_size=1, max_size=4))
+    @settings(max_examples=60, deadline=None)
+    def test_spec_for_shape_always_valid(dims):
+        _check_spec_for_shape(dims)
+
+else:
+    _rng = np.random.default_rng(0)
+    _SPEC_CASES = (
+        [[1], [4096], [1, 1, 1, 1], [4096, 4096, 4096, 4096]]
+        + [[int(_rng.choice(_SPEC_DIMS))
+            for _ in range(int(_rng.integers(1, 5)))] for _ in range(56)]
+    )
+
+    @pytest.mark.parametrize("dims", _SPEC_CASES)
+    def test_spec_for_shape_always_valid(dims):
+        _check_spec_for_shape(dims)
