@@ -1,15 +1,16 @@
 """Shared harness for the paper-replication benchmarks.
 
-The image datasets of the paper (SVHN/CIFAR-10/CINIC-10) are not available
-offline; the benchmarks run the same protocol (m=100 clients, Dirichlet(0.1)
-non-IID split, Eq.-9 heterogeneous p_i, 5 local steps, decaying LR) on the
-synthetic 10-class Gaussian task from ``repro.data.synthetic`` with a 2-layer
-MLP. Scale knobs (--rounds, --clients) trade fidelity for CPU time.
+The grid definitions (ALGOS, SCHEMES) and the synthetic stand-in task (2-layer
+MLP on the 10-class Gaussian dataset; see ``repro.experiments.tasks`` for why)
+live in ``repro.experiments`` — benchmarks re-export them. The table/figure
+suites themselves run on the vectorized sweep engine
+(``repro.experiments.grid.run_sweep``): S seeds of one (algo, scheme) cell
+execute as ONE compiled program.
 
-Training runs on the scanned multi-round engine: the dataset and the
-per-client index table live on device (``repro.data.classification_source``)
-and ``eval_every`` rounds execute as ONE ``run_rounds`` dispatch, so the
-scheme x algorithm sweeps are no longer bounded by per-round Python dispatch.
+``run_training`` — one cell-seed per Python call, fresh closures (and hence a
+fresh compile) every time — is kept as the sequential baseline that
+``benchmarks/sweep_throughput.py`` measures the engine against, and as the
+simplest entry point for one-off runs.
 """
 from __future__ import annotations
 
@@ -32,42 +33,17 @@ from repro.data import (
     dirichlet_partition,
     make_classification_data,
 )
+from repro.experiments.grid import ALGOS, SCHEMES  # noqa: F401  (re-export)
+from repro.experiments.tasks import (  # noqa: F401  (re-export)
+    mlp_accuracy,
+    mlp_init,
+    mlp_loss,
+)
 from repro.optim import paper_decay, sgd
-
-ALGOS = ["fedpbc", "fedavg", "fedavg_all", "fedau", "f3ast",
-         "fedavg_known_p", "mifa"]
-
-SCHEMES = {
-    "bernoulli_ti": dict(scheme="bernoulli", time_varying=False),
-    "bernoulli_tv": dict(scheme="bernoulli", time_varying=True),
-    "markov_hom": dict(scheme="markov", time_varying=False),
-    "markov_nonhom": dict(scheme="markov", time_varying=True),
-    "cyclic": dict(scheme="cyclic", cyclic_reset=False),
-    "cyclic_reset": dict(scheme="cyclic", cyclic_reset=True),
-}
-
-
-def mlp_init(key, dim=32, classes=10, hidden=64):
-    k1, k2 = jax.random.split(key)
-    return {
-        "w1": jax.random.normal(k1, (dim, hidden)) * dim ** -0.5,
-        "b1": jnp.zeros(hidden),
-        "w2": jax.random.normal(k2, (hidden, classes)) * hidden ** -0.5,
-        "b2": jnp.zeros(classes),
-    }
-
-
-def mlp_loss(params, batch):
-    h = jax.nn.relu(batch["x"] @ params["w1"] + params["b1"])
-    logits = h @ params["w2"] + params["b2"]
-    labels = jax.nn.one_hot(batch["y"], logits.shape[-1])
-    return -jnp.mean(jnp.sum(labels * jax.nn.log_softmax(logits), -1))
 
 
 def accuracy(params, x, y):
-    h = jax.nn.relu(x @ params["w1"] + params["b1"])
-    logits = h @ params["w2"] + params["b2"]
-    return float((jnp.argmax(logits, -1) == y).mean())
+    return float(mlp_accuracy(params, x, y))
 
 
 def run_training(algo_name, scheme_key, *, rounds=300, m=100, seed=0,

@@ -16,10 +16,13 @@ def run(csv=True):
         paper = 150.0 * p2 / (p2 + 1.0)
         rows.append((p2, closed, series, paper))
         assert abs(closed - paper) < 1e-9
+        # the Eq.-(3) geometric series must agree with both closed forms
+        # (truncated at machine precision, hence the looser tolerance)
+        assert abs(series - paper) < 1e-6, (p2, series, paper)
     if csv:
-        print("fig2_bias,p2,E_x_fedavg,paper_formula")
+        print("fig2_bias,p2,E_x_fedavg,E_x_series,paper_formula")
         for p2, c, s, f in rows:
-            print(f"fig2_bias,{p2:.3f},{c:.4f},{f:.4f}")
+            print(f"fig2_bias,{p2:.3f},{c:.4f},{s:.4f},{f:.4f}")
     return rows
 
 

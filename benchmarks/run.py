@@ -1,8 +1,9 @@
 """Benchmark driver — one module per paper table/figure. Prints CSV.
 
-  python -m benchmarks.run              # default (CPU-budget) suite
+  python -m benchmarks.run                    # default (CPU-budget) suite
   python -m benchmarks.run --only fig3
-  python -m benchmarks.run --rounds 400 # longer federated runs
+  python -m benchmarks.run --only fig2,table1,sweep   # comma-separated list
+  python -m benchmarks.run --rounds 400       # longer federated runs
 """
 from __future__ import annotations
 
@@ -13,8 +14,9 @@ import time
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="fig2|fig3|table1|table2|fig8|extensions|throughput|"
-                         "roofline|kernels")
+                    help="comma-separated subset of "
+                         "fig2|fig3|table1|table2|fig8|extensions|throughput|"
+                         "sweep|roofline|kernels (e.g. --only fig2,table1)")
     ap.add_argument("--rounds", type=int, default=250)
     args = ap.parse_args()
 
@@ -25,6 +27,7 @@ def main() -> None:
         fig8_ablations,
         kernels_bench,
         roofline,
+        sweep_throughput,
         table1_accuracy,
         table2_rounds_to_target,
         throughput,
@@ -38,10 +41,18 @@ def main() -> None:
         "fig8": lambda: fig8_ablations.run(rounds=max(args.rounds // 2, 100)),
         "extensions": lambda: extensions.run(rounds=args.rounds),
         "throughput": lambda: throughput.run(rounds=max(args.rounds, 200)),
+        "sweep": lambda: sweep_throughput.run(rounds=max(args.rounds // 2, 100)),
         "roofline": lambda: roofline.run(),
         "kernels": lambda: kernels_bench.run(),
     }
-    names = [args.only] if args.only else list(suites)
+    if args.only:
+        names = [n.strip() for n in args.only.split(",") if n.strip()]
+        unknown = [n for n in names if n not in suites]
+        if unknown:
+            ap.error(f"unknown suite(s) {','.join(unknown)}; "
+                     f"available: {','.join(suites)}")
+    else:
+        names = list(suites)
     for name in names:
         t0 = time.time()
         print(f"# === {name} ===", flush=True)

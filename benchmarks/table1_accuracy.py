@@ -1,32 +1,45 @@
 """Table 1: final train/test accuracy of all 7 algorithms under the six
 unreliable-uplink schemes (synthetic stand-in dataset; see common.py).
 
+Runs on the vectorized sweep engine: all seeds of one (scheme, algo) cell
+execute as ONE compiled program, results append to the JSONL/npz store under
+``benchmarks/out/sweeps`` (CSV stays as the console view).
+
 Default: 2 schemes x 7 algos x 1 seed at 250 rounds (CPU budget);
 --full runs all 6 schemes x 3 seeds."""
 from __future__ import annotations
 
-import numpy as np
+import dataclasses
+import os
 
-from benchmarks.common import ALGOS, SCHEMES, run_training
+from repro.experiments import ResultsStore, SweepSpec, run_sweep
+
+from benchmarks.common import ALGOS, SCHEMES
+
+
+def _default_store():
+    return ResultsStore(os.path.join(os.path.dirname(__file__), "out", "sweeps"))
 
 
 def run(csv=True, *, schemes=("bernoulli_ti", "bernoulli_tv"),
-        algos=ALGOS, rounds=250, m=100, seeds=(0,)):
+        algos=ALGOS, rounds=250, m=100, seeds=(0,), store=None):
+    if store is None:
+        store = _default_store()
+    spec = SweepSpec(algorithms=tuple(algos), schemes=tuple(schemes),
+                     seeds=tuple(seeds), rounds=rounds,
+                     eval_every=min(25, rounds), num_clients=m)
     if csv:
         print("table1,scheme,algo,test_acc_mean,test_acc_std,train_acc")
     results = {}
-    for scheme in schemes:
-        for algo in algos:
-            accs, tr = [], []
-            for sd in seeds:
-                traj, train_acc = run_training(algo, scheme, rounds=rounds,
-                                               m=m, seed=sd)
-                accs.append(np.mean([a for _, a in traj[-3:]]))
-                tr.append(train_acc)
-            results[(scheme, algo)] = (float(np.mean(accs)), float(np.std(accs)))
-            if csv:
-                print(f"table1,{scheme},{algo},{np.mean(accs):.4f},"
-                      f"{np.std(accs):.4f},{np.mean(tr):.4f}", flush=True)
+    for cell in run_sweep(spec, store=store, suite="table1"):
+        # same summarize() reduction the store records (ddof=1 std), so the
+        # CSV view and the JSONL summary agree
+        s = cell.summary()
+        mean, std = s["test_acc"]["mean"], s["test_acc"]["std"]
+        results[(cell.scheme, cell.algo)] = (mean, std)
+        if csv:
+            print(f"table1,{cell.scheme},{cell.algo},{mean:.4f},"
+                  f"{std:.4f},{s['train_acc']['mean']:.4f}", flush=True)
     return results
 
 

@@ -1,18 +1,26 @@
 """Table 2: first round to reach 1/4, 1/2, 3/4, 1 of the best test accuracy
-under Bernoulli time-varying links."""
+under Bernoulli time-varying links.
+
+The per-round eval trajectory comes from the sweep engine's in-scan eval
+cadence (``evals [S, E]`` at ``eval_rounds`` boundaries), so the whole
+7-algorithm column runs as 7 compiled programs total — no per-eval host
+round-trips."""
 from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import ALGOS, run_training
+from repro.experiments import SweepSpec, run_sweep
+
+from benchmarks.common import ALGOS
 
 
-def run(csv=True, *, rounds=300, m=100, algos=ALGOS, seed=0):
-    trajs = {}
-    for algo in algos:
-        traj, _ = run_training(algo, "bernoulli_tv", rounds=rounds, m=m,
-                               seed=seed, eval_every=10)
-        trajs[algo] = traj
+def run(csv=True, *, rounds=300, m=100, algos=ALGOS, seed=0, store=None):
+    spec = SweepSpec(algorithms=tuple(algos), schemes=("bernoulli_tv",),
+                     seeds=(seed,), rounds=rounds,
+                     eval_every=min(10, rounds), num_clients=m)
+    cells = run_sweep(spec, store=store, suite="table2")
+    trajs = {c.algo: list(zip(c.eval_rounds, c.test_acc.mean(axis=0)))
+             for c in cells}
     best = max(a for tr in trajs.values() for _, a in tr)
     targets = [best * f for f in (0.25, 0.5, 0.75, 1.0)]
     if csv:

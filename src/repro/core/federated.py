@@ -71,9 +71,14 @@ def init_fed_state(key, server_params, fed_cfg: FederationConfig,
     )
 
 
-def local_steps(loss_fn, optimizer, params, opt_state, batches, key, s: int):
+def local_steps(loss_fn, optimizer, params, opt_state, batches, s: int):
     """Run ``s`` local optimizer steps; ``batches`` has a leading [s, ...] axis
-    (one mini-batch per local step). Returns (params', opt_state', mean_loss)."""
+    (one mini-batch per local step). Returns (params', opt_state', mean_loss).
+
+    Local training is deterministic given the batches: all randomness lives in
+    the link process and the ``DataSource`` (stochastic local algorithms would
+    take their keys via ``batches`` leaves so the scan stays key-free here).
+    """
 
     def step(carry, batch):
         p, o = carry
@@ -99,17 +104,15 @@ def make_round_fn(loss_fn: Callable, optimizer, algorithm: Algorithm,
 
     def round_fn(state: FedState, batches) -> tuple:
         """batches: pytree with leading [m, s, ...] (per client, per step)."""
-        key, k_link, k_local = jax.random.split(state.key, 3)
+        key, k_link = jax.random.split(state.key)
         active, p_t, link_state = link.sample(state.link_state, state.round, k_link)
 
         starts = algorithm.client_start(state.algo_state, state.server, state.clients)
 
         run = partial(local_steps, loss_fn, optimizer, s=s)
-        m = fed_cfg.num_clients
-        keys = jax.random.split(k_local, m)
         x_star, opt_state, losses = jax.vmap(
             run, spmd_axis_name=spmd_axis_name)(
-            starts, state.opt_state, batches, keys)
+            starts, state.opt_state, batches)
 
         algo_state, server, clients = algorithm.aggregate(
             state.algo_state, state.server, state.clients, x_star, active,
@@ -214,9 +217,14 @@ def run_rounds_loop(state: FedState, ds_state, data_key, num_rounds: int, *,
     for _ in range(num_rounds):
         state, ds_state, metrics = step(state, ds_state, data_key)
         collected.append({k: metrics[k] for k in metric_keys})
-    stacked = {
-        k: jnp.stack([m[k] for m in collected]) for k in metric_keys
-    } if collected else {k: jnp.zeros((0,)) for k in metric_keys}
+    if collected:
+        stacked = {k: jnp.stack([m[k] for m in collected]) for k in metric_keys}
+    else:
+        # match the scanned engine: a [0, ...] leading axis on every metric's
+        # true per-round shape (e.g. staleness [0, m]), not a bare [0]
+        shapes = jax.eval_shape(step, state, ds_state, data_key)[2]
+        stacked = {k: jnp.zeros((0,) + shapes[k].shape, shapes[k].dtype)
+                   for k in metric_keys}
     return state, ds_state, stacked
 
 

@@ -1,0 +1,51 @@
+"""Vectorized experiment sweeps: grid specs -> device-batched simulations.
+
+- ``sweep``   — ``make_vmap_run_rounds``: S seeds of one (algo, scheme) cell
+  as ONE compiled program (vmap over the seed axis), plus the sweep CLI.
+- ``grid``    — ``SweepSpec`` grids, the executor, compile/task caches.
+- ``results`` — append-only JSONL/npz results store with mean/CI summaries.
+- ``tasks``   — the shared synthetic classification task the suites run on.
+"""
+from repro.experiments.grid import (
+    ALGOS,
+    SCHEMES,
+    CellResult,
+    SweepSpec,
+    run_cell,
+    run_sweep,
+)
+from repro.experiments.results import ResultsStore, git_sha, summarize
+from repro.experiments.sweep import (
+    eval_rounds,
+    make_vmap_run_rounds,
+    seed_keys,
+    stack_seed_keys,
+)
+from repro.experiments.tasks import (
+    ClassificationTask,
+    make_classification_task,
+    mlp_accuracy,
+    mlp_init,
+    mlp_loss,
+)
+
+__all__ = [
+    "ALGOS",
+    "SCHEMES",
+    "CellResult",
+    "SweepSpec",
+    "run_cell",
+    "run_sweep",
+    "ResultsStore",
+    "git_sha",
+    "summarize",
+    "eval_rounds",
+    "make_vmap_run_rounds",
+    "seed_keys",
+    "stack_seed_keys",
+    "ClassificationTask",
+    "make_classification_task",
+    "mlp_accuracy",
+    "mlp_init",
+    "mlp_loss",
+]

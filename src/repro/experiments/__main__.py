@@ -1,0 +1,6 @@
+"""``python -m repro.experiments`` — alias for the sweep CLI (avoids the
+runpy double-import warning ``-m repro.experiments.sweep`` prints)."""
+from repro.experiments.sweep import main
+
+if __name__ == "__main__":
+    main()

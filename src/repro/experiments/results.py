@@ -1,0 +1,131 @@
+"""Append-only results store for experiment sweeps.
+
+Each appended record is one JSON line in ``<root>/results.jsonl`` — scalar
+metadata and summaries only — and (optionally) one ``.npz`` file under
+``<root>/arrays/`` holding the record's array payloads (per-seed trajectories,
+final accuracies, ...). Records are keyed by a monotonically increasing
+``record_id`` and stamped with the repo's git SHA, so a sweep re-run after a
+code change appends new rows instead of silently overwriting old ones; the
+CSV printing the paper-table benchmarks used to do is now a *view* over this
+store, not the storage itself.
+
+The format is deliberately dependency-free: JSONL for greppable metadata,
+``numpy.savez_compressed`` for arrays.
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+import subprocess
+import uuid
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+
+def git_sha(cwd: Optional[str] = None) -> str:
+    """Short git SHA of the repo containing ``cwd`` (or this file); falls back
+    to ``"unknown"`` outside a git checkout (e.g. an installed wheel)."""
+    if cwd is None:
+        cwd = os.path.dirname(os.path.abspath(__file__))
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"], cwd=cwd,
+            capture_output=True, text=True, timeout=10)
+        sha = out.stdout.strip()
+        return sha if out.returncode == 0 and sha else "unknown"
+    except (OSError, subprocess.SubprocessError):
+        return "unknown"
+
+
+def summarize(values, confidence: str = "ci95") -> Dict[str, float]:
+    """Mean / std / normal-approx 95% CI half-width over a 1-D seed axis."""
+    v = np.asarray(values, np.float64).ravel()
+    n = int(v.size)
+    mean = float(v.mean()) if n else float("nan")
+    std = float(v.std(ddof=1)) if n > 1 else 0.0
+    half = 1.96 * std / math.sqrt(n) if n > 1 else 0.0
+    return {"mean": mean, "std": std, "n": n, confidence: half}
+
+
+def _jsonable(x):
+    if isinstance(x, (np.integer,)):
+        return int(x)
+    if isinstance(x, (np.floating,)):
+        return float(x)
+    if isinstance(x, (np.ndarray,)):
+        return x.tolist()
+    if isinstance(x, dict):
+        return {str(k): _jsonable(v) for k, v in x.items()}
+    if isinstance(x, (list, tuple)):
+        return [_jsonable(v) for v in x]
+    return x
+
+
+class ResultsStore:
+    """Append-only JSONL + npz store rooted at a directory.
+
+    >>> store = ResultsStore("benchmarks/out/sweeps")
+    >>> rec = store.append({"suite": "table1", "algo": "fedpbc"},
+    ...                    arrays={"test_acc": acc})   # acc: [S, E]
+    >>> rows = store.records(suite="table1")
+    >>> store.load_arrays(rows[-1])["test_acc"]
+    """
+
+    def __init__(self, root: str):
+        self.root = root
+        self.arrays_dir = os.path.join(root, "arrays")
+        self.path = os.path.join(root, "results.jsonl")
+        os.makedirs(self.arrays_dir, exist_ok=True)
+
+    def _next_id(self) -> int:
+        if not os.path.exists(self.path):
+            return 0
+        with open(self.path) as f:
+            return sum(1 for line in f if line.strip())
+
+    def append(self, record: Dict[str, Any],
+               arrays: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+        """Write one record; returns it with ``record_id`` / ``git_sha`` /
+        ``arrays`` (npz relpath) fields filled in."""
+        rec = dict(record)
+        rec["record_id"] = self._next_id()
+        rec.setdefault("git_sha", git_sha())
+        if arrays:
+            # record_id is derived from the line count, so two processes
+            # appending concurrently can both claim id N; the random suffix
+            # keeps their array payloads from clobbering each other (each
+            # record references its own npz)
+            rel = os.path.join(
+                "arrays", f"r{rec['record_id']:06d}-{uuid.uuid4().hex[:8]}.npz")
+            np.savez_compressed(
+                os.path.join(self.root, rel),
+                **{k: np.asarray(v) for k, v in arrays.items()})
+            rec["arrays"] = rel
+        line = json.dumps(_jsonable(rec), sort_keys=True)
+        with open(self.path, "a") as f:
+            f.write(line + "\n")
+        return rec
+
+    def records(self, **filters) -> List[Dict[str, Any]]:
+        """All records whose top-level fields equal ``filters`` (e.g.
+        ``records(suite="table1", algo="fedpbc")``), in append order."""
+        if not os.path.exists(self.path):
+            return []
+        out = []
+        with open(self.path) as f:
+            for line in f:
+                if not line.strip():
+                    continue
+                rec = json.loads(line)
+                if all(rec.get(k) == v for k, v in filters.items()):
+                    out.append(rec)
+        return out
+
+    def load_arrays(self, record: Dict[str, Any]) -> Dict[str, np.ndarray]:
+        rel = record.get("arrays")
+        if not rel:
+            return {}
+        with np.load(os.path.join(self.root, rel)) as z:
+            return {k: z[k] for k in z.files}

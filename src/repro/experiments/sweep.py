@@ -1,0 +1,211 @@
+"""Vmapped multi-seed experiment runner + the sweep CLI.
+
+One `(algorithm, link-scheme)` grid cell of a paper table is S seeded
+repetitions of the same program. ``make_vmap_run_rounds`` vmaps the ENTIRE
+per-seed pipeline —
+
+    init params -> init_fed_state -> K rounds (lax.scan) -> periodic eval
+
+— over a leading seed axis, so all S repetitions execute as ONE compiled
+device program: per-seed PRNG keys and per-seed Eq.-9 ``p_base`` vectors are
+batched inputs, the dataset is a shared jit constant, and metrics come back
+stacked ``[S, K, ...]`` (evals ``[S, E]``). Compared with the sequential
+per-seed loop (``benchmarks/common.run_training`` called S times) this
+removes S-1 compilations and all per-seed dispatch — the ``lax.scan`` engine
+of PR 1 collapsed the round axis; this collapses the seed axis on top of it.
+
+The link process is built INSIDE the vmapped function from the traced
+``p_base`` argument (``link_factory``), which is what lets seeds differ in
+their connection-probability draw without recompiling.
+
+CLI::
+
+    PYTHONPATH=src python -m repro.experiments.sweep \
+        --algos fedpbc,fedavg --schemes bernoulli_ti,markov_hom \
+        --seeds 0,1,2 --rounds 100 --clients 32 --out benchmarks/out/sweeps
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FederationConfig
+from repro.core.algorithms import Algorithm
+from repro.core.federated import (
+    DEFAULT_METRIC_KEYS,
+    init_fed_state,
+    make_round_fn,
+    make_round_step,
+)
+
+
+def seed_keys(seed: int):
+    """The per-seed key bundle. Matches the historical layout of
+    ``benchmarks/common.run_training`` (params=seed+1, state=seed+2,
+    ds=seed+3, data=seed+4) so migrated suites keep their key protocol."""
+    return {
+        "params": jax.random.PRNGKey(seed + 1),
+        "state": jax.random.PRNGKey(seed + 2),
+        "ds": jax.random.PRNGKey(seed + 3),
+        "data": jax.random.PRNGKey(seed + 4),
+    }
+
+
+def stack_seed_keys(seeds):
+    """Stack per-seed key bundles into one [S]-batched pytree."""
+    bundles = [seed_keys(s) for s in seeds]
+    return jax.tree.map(lambda *ks: jnp.stack(ks), *bundles)
+
+
+def make_vmap_run_rounds(loss_fn: Callable, optimizer, algorithm: Algorithm,
+                         fed_cfg: FederationConfig, source, *,
+                         link_factory: Callable,
+                         init_params: Callable,
+                         num_rounds: int,
+                         eval_every: int = 0,
+                         eval_fn: Optional[Callable] = None,
+                         metric_keys=DEFAULT_METRIC_KEYS):
+    """Build the jitted S-seed runner for one grid cell.
+
+    Args:
+      link_factory: ``p_base [m] -> LinkProcess`` (e.g.
+        ``lambda p: make_link_process(p, fed_cfg)``); called on the traced
+        per-seed probability vector inside the vmapped trace.
+      init_params: ``key -> model params`` (per-seed model init).
+      num_rounds: static total round count K.
+      eval_every / eval_fn: when both set, ``eval_fn(server_params)`` runs
+        every ``eval_every`` rounds *inside* the compiled program (plus once
+        at round K when K is not a multiple), and the result comes back as
+        ``out["evals"] [S, E]`` with boundaries ``eval_rounds(...)``.
+
+    Returns ``run(keys, p_base) -> (states, out)`` where ``keys`` is a
+    ``stack_seed_keys`` bundle, ``p_base`` is ``[S, m]``, ``states`` is an
+    [S]-batched ``FedState`` and ``out["metrics"]`` maps each metric key to a
+    ``[S, K, ...]`` array. Bit-for-bit equal (per seed) to S independent
+    ``make_run_rounds`` trajectories with the same keys —
+    ``tests/test_sweep.py`` enforces this.
+
+    The runner is two compiled programs, not one: a (cheap) batched init and
+    the batched round scan, with the [S]-batched state passed BETWEEN them as
+    a device array. Fusing init into the same program as the scan lets XLA
+    compile the scan body in a different fusion context, which on CPU can
+    perturb float reductions by 1 ulp — the split keeps the scan stage's
+    abstract signature identical in structure to ``make_run_rounds`` and is
+    what makes per-seed bitwise equality hold.
+    """
+    do_eval = eval_fn is not None and eval_every > 0
+    n_chunks, rem = divmod(num_rounds, eval_every) if do_eval else (0, num_rounds)
+
+    def init_seed(keys, p_base):
+        link = link_factory(p_base)
+        params = init_params(keys["params"])
+        st = init_fed_state(keys["state"], params, fed_cfg, algorithm, link,
+                            optimizer)
+        return st, source.init(keys["ds"])
+
+    def scan_seed(st, ds, data_key, p_base):
+        link = link_factory(p_base)
+        round_fn = make_round_fn(loss_fn, optimizer, algorithm, link, fed_cfg)
+        step = make_round_step(round_fn, source)
+
+        def body(carry, _):
+            st, ds = carry
+            st, ds, mets = step(st, ds, data_key)
+            return (st, ds), {k: mets[k] for k in metric_keys}
+
+        def run_span(carry, length):
+            return jax.lax.scan(body, carry, None, length=length)
+
+        if not do_eval:
+            (st, ds), mets = run_span((st, ds), num_rounds)
+            return st, {"metrics": mets}
+
+        def chunk(carry, _):
+            carry, mets = run_span(carry, eval_every)
+            return carry, (mets, eval_fn(carry[0].server))
+
+        carry, (mets, evals) = jax.lax.scan(chunk, (st, ds), None,
+                                            length=n_chunks)
+        # [E, eval_every, ...] -> [E * eval_every, ...]
+        mets = jax.tree.map(lambda a: a.reshape((-1,) + a.shape[2:]), mets)
+        if rem:
+            carry, tail = run_span(carry, rem)
+            mets = jax.tree.map(
+                lambda a, b: jnp.concatenate([a, b], 0), mets, tail)
+            evals = jnp.concatenate([evals, eval_fn(carry[0].server)[None]])
+        st, ds = carry
+        return st, {"metrics": mets, "evals": evals}
+
+    init_batch = jax.jit(jax.vmap(init_seed))
+    scan_batch = jax.jit(jax.vmap(scan_seed))
+
+    def run(keys, p_base):
+        st, ds = init_batch(keys, p_base)
+        return scan_batch(st, ds, keys["data"], p_base)
+
+    return run
+
+
+def eval_rounds(num_rounds: int, eval_every: int):
+    """Round indices (1-based) at which the runner's evals fire.
+    ``eval_every <= 0`` means a single eval at the final round."""
+    if eval_every <= 0:
+        return [num_rounds]
+    n_chunks, rem = divmod(num_rounds, eval_every)
+    out = [eval_every * (i + 1) for i in range(n_chunks)]
+    if rem:
+        out.append(num_rounds)
+    return out
+
+
+def main(argv=None) -> None:
+    import argparse
+
+    # lazy: grid imports this module
+    from repro.experiments.grid import ALGOS, SCHEMES, SweepSpec, run_sweep
+    from repro.experiments.results import ResultsStore
+
+    ap = argparse.ArgumentParser(
+        description="Run a (algorithm x scheme x seed) sweep on the vmapped "
+                    "engine and append results to a JSONL/npz store.")
+    ap.add_argument("--algos", default="fedpbc,fedavg",
+                    help=f"comma list from {','.join(ALGOS)}")
+    ap.add_argument("--schemes", default="bernoulli_ti",
+                    help=f"comma list from {','.join(SCHEMES)}")
+    ap.add_argument("--seeds", default="0,1,2", help="comma list of ints")
+    ap.add_argument("--rounds", type=int, default=100)
+    ap.add_argument("--eval-every", type=int, default=25)
+    ap.add_argument("--clients", type=int, default=100)
+    ap.add_argument("--local-steps", type=int, default=5)
+    ap.add_argument("--alpha", type=float, default=0.1)
+    ap.add_argument("--gamma", type=float, default=0.5)
+    ap.add_argument("--delta", type=float, default=0.02)
+    ap.add_argument("--sigma0", type=float, default=10.0)
+    ap.add_argument("--out", default="benchmarks/out/sweeps",
+                    help="results-store directory (JSONL + npz)")
+    ap.add_argument("--suite", default="cli", help="suite tag on the records")
+    args = ap.parse_args(argv)
+
+    spec = SweepSpec(
+        algorithms=tuple(args.algos.split(",")),
+        schemes=tuple(args.schemes.split(",")),
+        seeds=tuple(int(s) for s in args.seeds.split(",")),
+        rounds=args.rounds, eval_every=args.eval_every,
+        num_clients=args.clients, local_steps=args.local_steps,
+        alpha=args.alpha, gamma=args.gamma, delta=args.delta,
+        sigma0=args.sigma0)
+    store = ResultsStore(args.out)
+    print("sweep,scheme,algo,seeds,test_acc_mean,test_acc_ci95,train_acc_mean",
+          flush=True)
+    for cell in run_sweep(spec, store=store, suite=args.suite):
+        s = cell.summary()
+        print(f"sweep,{cell.scheme},{cell.algo},{len(cell.seeds)},"
+              f"{s['test_acc']['mean']:.4f},{s['test_acc']['ci95']:.4f},"
+              f"{s['train_acc']['mean']:.4f}", flush=True)
+    print(f"# results appended to {store.path}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -100,6 +100,23 @@ def test_scan_matches_sequential_bit_for_bit(algo_name, scheme):
                                       np.asarray(met_seq[k]))
 
 
+def test_run_rounds_loop_zero_rounds_metric_shapes():
+    """num_rounds=0 must return metrics with the true per-round trailing
+    shapes ([0, m] for staleness, not a bare [0]) and leave state untouched."""
+    source = _source()
+    fed, algo, link, opt, st0 = _problem("fedpbc", "bernoulli")
+    ds0 = source.init(jax.random.PRNGKey(4))
+    round_fn = make_round_fn(_mlp_loss, opt, algo, link, fed)
+    st, ds, mets = run_rounds_loop(st0, ds0, jax.random.PRNGKey(5), 0,
+                                   round_fn=round_fn, source=source)
+    assert mets["loss"].shape == (0,)
+    assert mets["num_active"].shape == (0,)
+    assert mets["staleness"].shape == (0, M)
+    assert mets["staleness"].dtype == jnp.float32
+    _assert_trees_equal(st, st0)
+    _assert_trees_equal(ds, ds0)
+
+
 def test_chunked_scan_matches_single_scan():
     """K rounds as one scan == the same K rounds split across chunks."""
     source = _source()

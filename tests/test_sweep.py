@@ -1,0 +1,231 @@
+"""Vectorized sweep engine: the vmapped [S]-seed runner must be bit-for-bit
+identical to S independent sequential ``make_run_rounds`` trajectories with
+the same per-seed keys (mirrors ``tests/test_run_rounds.py``), and the
+JSONL/npz results store must round-trip.
+
+Shapes here (m=8, dim=16, hidden=16) are ones where XLA CPU compiles the
+batched scan body with the same float reduction order as the unbatched one,
+so equality is exact; at some other shapes CPU codegen can reassociate
+reductions by 1 ulp (see ``make_vmap_run_rounds``'s docstring — the engine's
+two-dispatch structure is what makes exactness attainable at all).
+"""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    init_fed_state,
+    make_algorithm,
+    make_link_process,
+    make_run_rounds,
+)
+from repro.experiments import (
+    ResultsStore,
+    SweepSpec,
+    eval_rounds,
+    make_classification_task,
+    make_vmap_run_rounds,
+    run_cell,
+    run_sweep,
+    seed_keys,
+    stack_seed_keys,
+)
+from repro.experiments.grid import _RUNNER_CACHE, seed_base_probs
+from repro.optim import paper_decay, sgd
+
+M, S_LOCAL, B = 8, 3, 4
+SEEDS = (0, 1)
+SPEC = SweepSpec(seeds=SEEDS, num_clients=M, dim=16, hidden=16, classes=10,
+                 n_per_class=60, n_train=480, per_client=24,
+                 batch_size=B, local_steps=S_LOCAL)
+
+
+def _task():
+    return make_classification_task(
+        data_seed=SPEC.data_seed, num_clients=M, dim=SPEC.dim,
+        classes=SPEC.classes, hidden=SPEC.hidden, n_per_class=SPEC.n_per_class,
+        n_train=SPEC.n_train, alpha=SPEC.alpha, per_client=SPEC.per_client,
+        local_steps=S_LOCAL, batch_size=B)
+
+
+def _assert_trees_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def _sequential_reference(task, fed, algo, opt, p_base, num_rounds,
+                          chunks=None):
+    """S independent ``make_run_rounds`` trajectories with the engine's keys.
+
+    ``chunks``: optional round-chunk lengths; when given, ``eval_test`` runs
+    after every chunk (the sequential counterpart of in-scan eval cadence).
+    """
+    states, metrics, evals = [], [], []
+    for i, seed in enumerate(SEEDS):
+        ks = seed_keys(seed)
+        link = make_link_process(p_base[i], fed)
+        run_rounds = make_run_rounds(task.loss_fn, opt, algo, link, fed,
+                                     task.source, donate=False)
+        st = init_fed_state(ks["state"], task.init_params(ks["params"]), fed,
+                            algo, link, opt)
+        ds = task.source.init(ks["ds"])
+        if chunks is None:
+            st, ds, mets = run_rounds(st, ds, ks["data"], num_rounds)
+            seed_evals = None
+        else:
+            collected, seed_evals = [], []
+            for c in chunks:
+                st, ds, mets_c = run_rounds(st, ds, ks["data"], c)
+                collected.append(mets_c)
+                seed_evals.append(task.eval_test(st.server))
+            mets = jax.tree.map(lambda *xs: jnp.concatenate(xs), *collected)
+        states.append(st)
+        metrics.append(mets)
+        evals.append(seed_evals)
+    return states, metrics, evals
+
+
+@pytest.mark.parametrize("algo_name,scheme", [
+    ("fedpbc", "bernoulli_ti"),
+    ("fedavg", "markov_hom"),
+    ("mifa", "cyclic"),
+])
+def test_vmap_matches_sequential_bit_for_bit(algo_name, scheme):
+    task = _task()
+    fed = SPEC.cell_config(algo_name, scheme)
+    algo = make_algorithm(fed)
+    opt = sgd(paper_decay(SPEC.lr))
+    K = 7
+
+    runner = make_vmap_run_rounds(
+        task.loss_fn, opt, algo, fed, task.source,
+        link_factory=lambda p: make_link_process(p, fed),
+        init_params=task.init_params, num_rounds=K)
+    p_base = seed_base_probs(SPEC)
+    states, out = runner(stack_seed_keys(SEEDS), p_base)
+
+    seq_states, seq_metrics, _ = _sequential_reference(
+        task, fed, algo, opt, p_base, K)
+    for i in range(len(SEEDS)):
+        _assert_trees_equal(jax.tree.map(lambda x: x[i], states),
+                            seq_states[i])
+        for k in seq_metrics[i]:
+            np.testing.assert_array_equal(
+                np.asarray(out["metrics"][k][i]),
+                np.asarray(seq_metrics[i][k]))
+    assert out["metrics"]["loss"].shape == (len(SEEDS), K)
+    assert out["metrics"]["staleness"].shape == (len(SEEDS), K, M)
+
+
+def test_vmap_eval_chunking_matches_chunked_sequential():
+    """In-scan eval cadence (with a remainder tail: 7 = 3 + 3 + 1) must not
+    perturb the trajectory, and evals must equal chunk-boundary evals of the
+    sequential engine."""
+    task = _task()
+    fed = SPEC.cell_config("fedpbc", "bernoulli_ti")
+    algo = make_algorithm(fed)
+    opt = sgd(paper_decay(SPEC.lr))
+    K, cadence = 7, 3
+
+    runner = make_vmap_run_rounds(
+        task.loss_fn, opt, algo, fed, task.source,
+        link_factory=lambda p: make_link_process(p, fed),
+        init_params=task.init_params, num_rounds=K,
+        eval_every=cadence, eval_fn=task.eval_test)
+    p_base = seed_base_probs(SPEC)
+    states, out = runner(stack_seed_keys(SEEDS), p_base)
+
+    assert eval_rounds(K, cadence) == [3, 6, 7]
+    assert out["evals"].shape == (len(SEEDS), 3)
+    assert out["metrics"]["loss"].shape == (len(SEEDS), K)
+
+    seq_states, seq_metrics, seq_evals = _sequential_reference(
+        task, fed, algo, opt, p_base, K, chunks=(3, 3, 1))
+    for i in range(len(SEEDS)):
+        _assert_trees_equal(jax.tree.map(lambda x: x[i], states),
+                            seq_states[i])
+        np.testing.assert_array_equal(
+            np.asarray(out["metrics"]["loss"][i]),
+            np.asarray(seq_metrics[i]["loss"]))
+        np.testing.assert_array_equal(np.asarray(out["evals"][i]),
+                                      np.asarray(jnp.stack(seq_evals[i])))
+
+
+def test_results_store_roundtrip(tmp_path):
+    store = ResultsStore(str(tmp_path / "sweeps"))
+    acc = np.linspace(0.1, 0.9, 6).reshape(2, 3)
+    rec0 = store.append({"suite": "t", "algo": "fedpbc", "scheme": "cyclic"},
+                        arrays={"test_acc": acc})
+    rec1 = store.append({"suite": "t", "algo": "fedavg", "scheme": "cyclic"})
+    assert rec0["record_id"] == 0 and rec1["record_id"] == 1
+    assert rec0["git_sha"]  # stamped (short sha or "unknown")
+
+    rows = store.records(suite="t")
+    assert [r["algo"] for r in rows] == ["fedpbc", "fedavg"]
+    assert store.records(algo="fedpbc")[0]["scheme"] == "cyclic"
+    np.testing.assert_array_equal(
+        store.load_arrays(rows[0])["test_acc"], acc)
+    assert store.load_arrays(rows[1]) == {}
+
+    # a fresh handle on the same directory appends, never overwrites
+    store2 = ResultsStore(str(tmp_path / "sweeps"))
+    rec2 = store2.append({"suite": "t2"})
+    assert rec2["record_id"] == 2
+    with open(store2.path) as f:
+        lines = [json.loads(l) for l in f if l.strip()]
+    assert len(lines) == 3
+
+
+def test_run_sweep_grid_and_compile_cache(tmp_path):
+    import dataclasses
+    spec = dataclasses.replace(SPEC, algorithms=("fedpbc", "fedavg"),
+                               schemes=("bernoulli_ti",),
+                               rounds=4, eval_every=2)
+    store = ResultsStore(str(tmp_path / "sweeps"))
+    cells = run_sweep(spec, store=store, suite="smoke")
+
+    assert [(c.algo, c.scheme) for c in cells] == [
+        ("fedpbc", "bernoulli_ti"), ("fedavg", "bernoulli_ti")]
+    for cell in cells:
+        assert cell.test_acc.shape == (len(SEEDS), 2)
+        assert cell.train_acc.shape == (len(SEEDS),)
+        assert cell.loss.shape == (len(SEEDS), 4)
+        assert cell.eval_rounds == [2, 4]
+        s = cell.summary()
+        assert set(s) == {"test_acc", "train_acc"}
+        assert s["test_acc"]["n"] == len(SEEDS)
+
+    rows = store.records(suite="smoke")
+    assert len(rows) == 2
+    loaded = store.load_arrays(rows[0])
+    np.testing.assert_array_equal(loaded["test_acc"], cells[0].test_acc)
+
+    # Eq.-9 knobs (delta/sigma0) reach the compiled program only as traced
+    # p_base inputs: a sweep differing ONLY in them must reuse the compiled
+    # runner (no new cache entry)
+    n_runners = len(_RUNNER_CACHE)
+    spec_d = dataclasses.replace(spec, delta=0.1, sigma0=1.0,
+                                 algorithms=("fedpbc",))
+    cell_d = run_cell(spec_d, "fedpbc", "bernoulli_ti")
+    assert len(_RUNNER_CACHE) == n_runners
+    assert cell_d.test_acc.shape == (len(SEEDS), 2)
+
+
+def test_sweep_throughput_bench_records_speedup():
+    """The acceptance benchmark (m=32, S=8 on CPU) must record >= 2x
+    cells/sec for the vmapped engine over the sequential run_training loop.
+    Regenerate with ``python -m benchmarks.run --only sweep``."""
+    path = os.path.join(os.path.dirname(__file__), "..", "benchmarks", "out",
+                        "sweep_throughput.json")
+    if not os.path.exists(path):
+        pytest.skip("benchmarks/out/sweep_throughput.json not generated yet")
+    with open(path) as f:
+        bench = json.load(f)
+    assert bench["m"] == 32 and bench["n_seeds"] == 8
+    assert bench["speedup"] >= 2.0, bench
