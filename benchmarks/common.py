@@ -8,9 +8,11 @@ suites themselves run on the vectorized sweep engine
 execute as ONE compiled program.
 
 ``run_training`` — one cell-seed per Python call, fresh closures (and hence a
-fresh compile) every time — is kept as the sequential baseline that
-``benchmarks/sweep_throughput.py`` measures the engine against, and as the
-simplest entry point for one-off runs.
+fresh compile) every time, per-seed dataset — is kept as the simplest entry
+point for one-off runs (``benchmarks/extensions.py``).
+``benchmarks/sweep_throughput.py`` builds its sequential baseline on the
+engine's own shared-dataset protocol instead, so its accuracy columns are
+comparable across arms and trajectory equality is asserted in the bench.
 """
 from __future__ import annotations
 

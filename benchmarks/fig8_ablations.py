@@ -2,11 +2,14 @@
 fluctuation), delta (p_i floor), sigma0 (class-weight spread) on FedPBC and
 FedAvg under Bernoulli time-varying links.
 
-Each swept value is one ``SweepSpec`` on the vectorized engine. delta/sigma0
-enter the compiled program only through the traced per-seed ``p_base``
-inputs, so those ablation rows reuse ONE compiled runner per algorithm
-(the grid executor's compile cache); alpha re-partitions the dataset and
-gamma is baked into the link closures, so those recompile."""
+Each swept parameter is ONE ``SweepSpec`` whose hyperparameter axis carries
+all the values: every (value x seed) trajectory of an ablation executes as
+one compiled program per algorithm. All four knobs are traced inputs on the
+batched sweep core — gamma through the link factory's traced scalar,
+delta/sigma0 through the traced per-trajectory ``p_base``, alpha through both
+``p_base`` and the traced partition table — so the figure compiles exactly
+``len(algos)`` programs total, where the per-value path used to pay a fresh
+task and/or compile per alpha and gamma value."""
 from __future__ import annotations
 
 import dataclasses
@@ -20,7 +23,6 @@ SWEEPS = {
     "sigma0": [1.0, 10.0],
 }
 
-
 def run(csv=True, *, rounds=200, m=100, algos=("fedpbc", "fedavg"), seed=0,
         store=None):
     if csv:
@@ -30,15 +32,15 @@ def run(csv=True, *, rounds=200, m=100, algos=("fedpbc", "fedavg"), seed=0,
                      eval_every=min(25, rounds), num_clients=m)
     out = {}
     for param, values in SWEEPS.items():
-        for v in values:
-            spec = dataclasses.replace(base, **{param: v})
-            for cell in run_sweep(spec, store=store,
-                                  suite=f"fig8_{param}"):
-                acc = float(cell.final_test().mean())
-                out[(param, v, cell.algo)] = acc
-                if csv:
-                    print(f"fig8,{param},{v},{cell.algo},{acc:.4f}",
-                          flush=True)
+        # the axis field for a scalar knob is its plural (SweepSpec naming)
+        spec = dataclasses.replace(base, **{param + "s": tuple(values)})
+        for cell in run_sweep(spec, store=store, suite=f"fig8_{param}"):
+            v = cell.hparams[param]
+            acc = float(cell.final_test().mean())
+            out[(param, v, cell.algo)] = acc
+            if csv:
+                print(f"fig8,{param},{v},{cell.algo},{acc:.4f}",
+                      flush=True)
     return out
 
 

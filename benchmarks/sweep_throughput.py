@@ -1,41 +1,146 @@
-"""Sweep-throughput: vmapped multi-seed engine vs the sequential per-seed loop.
+"""Sweep-throughput: the batched engine vs its sequential / per-value-recompile
+baselines, on two axes.
 
-The workload is one (fedpbc, bernoulli_ti) grid cell at m=32 clients repeated
-over S=8 seeds — the acceptance workload of the vectorized sweep subsystem:
+1. **Seed axis** (the PR-2 acceptance workload): one (fedpbc, bernoulli_ti)
+   cell at m=32 clients over S=8 seeds.
 
-- ``sequential``: S ``benchmarks.common.run_training`` calls, the
-  pre-subsystem execution model. Every call builds fresh closures (data
-  source, link, round step), so every seed pays its own XLA compile on top of
-  its own scan dispatches and eval round-trips.
-- ``vmapped``: ``repro.experiments.grid.run_cell`` — all S seeds execute as
-  ONE compiled program (shared dataset, batched keys and Eq.-9 p_base, evals
-  in-scan). Reported both cold (includes the one compile) and warm.
+   - ``sequential``: S per-seed runs with fresh closures each (data source,
+     link, round step), so every seed pays its own XLA compile on top of its
+     own scan dispatch — the pre-subsystem execution model. Both arms now run
+     the SAME protocol (shared ``data_seed=0`` dataset and partition, engine
+     key bundles, per-seed Eq.-9 ``p_base``), so the accuracy columns are
+     directly comparable and the bench ASSERTS trajectory agreement between
+     the arms (``trajectory_max_abs_diff``) instead of printing two
+     incomparable numbers.
+   - ``vmapped``: ``repro.experiments.grid.run_cell`` — all S seeds as ONE
+     compiled program. Reported cold (includes the compile) and warm.
 
-The figure of merit is cells/sec where one "cell" = one seed-run of
-``rounds`` rounds. Prints a ``BENCH {...}`` JSON line and writes it to
-``benchmarks/out/sweep_throughput.json``. Acceptance bar: ``speedup >= 2``
-(warm vmapped vs sequential).
+2. **Hyperparameter axis** (this refactor's acceptance workload): an
+   lr x alpha ablation grid x S seeds of the same cell.
+
+   - ``per-value-recompile``: one PR-2-style seed-axis runner per point with
+     the lr baked into its optimizer closure (a fresh compile pair per point)
+     and the task rebuilt per distinct alpha (the dataset partition was a jit
+     constant) — the pre-refactor cost model.
+   - ``traced``: ``run_cell_batch`` — every (lr, alpha, seed) trajectory in
+     ONE compiled program, lr as a traced scalar and the alpha partition as a
+     traced index table. Compile counts for both arms come from the runners'
+     jit cache sizes.
+
+The hyperparameter comparison is steady-state: a per-value-recompile path
+recompiles for EVERY new swept value, forever, while the traced path's one
+compile serves any values of the same grid shape — so after the first (cold,
+also reported) ablation, the bench re-runs the traced arm with *entirely
+different* lr/alpha values and verifies via the jit caches that it compiled
+nothing; that run vs the baseline's unavoidable recompile cost is the
+headline ``hparam_ablation.speedup``.
+
+The figure of merit is cells/sec where one "cell" = one trajectory of
+``rounds`` rounds. Prints a ``BENCH {...}`` JSON line and writes
+``benchmarks/out/sweep_throughput.json``. Acceptance bars: ``speedup >= 2``
+(warm vmapped vs sequential, seed axis) and ``hparam_ablation.speedup >= 2``
+(traced ablation at unseen values vs the per-value-recompile path).
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 import os
 import time
 
 import jax
+import numpy as np
 
-from repro.experiments import SweepSpec, run_cell
+from repro.core import init_fed_state, make_algorithm, make_link_process, make_run_rounds
+from repro.experiments import (
+    SweepSpec,
+    make_classification_task,
+    make_vmap_run_rounds,
+    run_cell,
+    run_cell_batch,
+    seed_keys,
+    stack_seed_keys,
+)
+from repro.experiments.grid import get_task, point_base_probs, seed_base_probs
+from repro.optim import paper_decay, sgd
 
-from benchmarks.common import run_training
+
+def _cache_entries(runner) -> int:
+    if not (hasattr(runner.init_batch, "_cache_size")
+            and hasattr(runner.scan_batch, "_cache_size")):
+        return -1
+    return runner.init_batch._cache_size() + runner.scan_batch._cache_size()
 
 
-def run(csv=True, *, rounds=100, m=32, n_seeds=8, seed0=0, out_path=None):
+def _sequential_seed_arm(spec: SweepSpec, lr: float):
+    """S per-seed sequential runs on the engine's exact protocol (shared
+    dataset, engine keys, per-seed p_base) with fresh closures per seed —
+    the pre-subsystem cost model. Returns ``evals [S, E]``."""
+    task = get_task(spec)
+    fed = spec.cell_config("fedpbc", "bernoulli_ti")
+    p_base = np.asarray(seed_base_probs(spec))
+    evals = []
+    for i, seed in enumerate(spec.seeds):
+        algo = make_algorithm(fed)                     # fresh closures: the
+        opt = sgd(paper_decay(lr))                     # per-seed compile is
+        link = make_link_process(p_base[i], fed)       # the cost measured
+        run_rounds = make_run_rounds(task.loss_fn, opt, algo, link, fed,
+                                     task.source, donate=False)
+        ks = seed_keys(seed)
+        st = init_fed_state(ks["state"], task.init_params(ks["params"]), fed,
+                            algo, link, opt)
+        ds = task.source.init(ks["ds"])
+        seed_evals, t = [], 0
+        while t < spec.rounds:
+            chunk = min(spec.eval_every, spec.rounds - t)
+            st, ds, _ = run_rounds(st, ds, ks["data"], chunk)
+            t += chunk
+            seed_evals.append(float(task.eval_test(st.server)))
+        evals.append(seed_evals)
+    return np.asarray(evals)
+
+
+def _per_value_recompile_arm(spec: SweepSpec, points):
+    """One PR-2 seed-axis runner per hyperparameter point — the lr baked into
+    the optimizer closure (a fresh (init, scan) compile pair per point) and
+    the constant-capturing task rebuilt per distinct alpha. Returns
+    (evals [P, S, E], total jit cache entries)."""
+    fed = spec.cell_config("fedpbc", "bernoulli_ti")
+    keys = stack_seed_keys(spec.seeds)
+    evals, cache_entries, tasks = [], 0, {}
+    for pt in points:
+        if pt["alpha"] not in tasks:        # per-alpha task rebuild: the
+            tasks[pt["alpha"]] = make_classification_task(   # partition was
+                data_seed=spec.data_seed,                    # a jit constant
+                num_clients=spec.num_clients, dim=spec.dim,
+                classes=spec.classes, hidden=spec.hidden,
+                n_per_class=spec.n_per_class, n_train=spec.n_train,
+                alpha=pt["alpha"], per_client=spec.per_client,
+                local_steps=spec.local_steps, batch_size=spec.batch_size)
+        task = tasks[pt["alpha"]]
+        runner = make_vmap_run_rounds(
+            task.loss_fn, sgd(paper_decay(pt["lr"])), make_algorithm(fed),
+            fed, task.source,
+            link_factory=lambda p: make_link_process(p, fed),
+            init_params=task.init_params, num_rounds=spec.rounds,
+            eval_every=spec.eval_every,
+            eval_fn=task.eval_test)
+        _, out = runner(keys, point_base_probs(spec, pt))
+        evals.append(np.asarray(out["evals"]))
+        n = _cache_entries(runner)
+        cache_entries = -1 if n < 0 or cache_entries < 0 else cache_entries + n
+    return np.asarray(evals), cache_entries
+
+
+def run(csv=True, *, rounds=100, m=32, n_seeds=8, seed0=0, out_path=None,
+        ablation_lrs=(0.03, 0.05, 0.1, 0.2), ablation_alphas=(0.1, 1.0),
+        ablation_seeds=4, ablation_rounds=None):
     seeds = tuple(range(seed0, seed0 + n_seeds))
     spec = SweepSpec(algorithms=("fedpbc",), schemes=("bernoulli_ti",),
                      seeds=seeds, rounds=rounds, eval_every=min(25, rounds),
                      num_clients=m)
 
-    # --- vmapped engine: cold includes compile; warm re-runs the cached cell
+    # --- seed axis: vmapped engine, cold (includes compile) then warm
     t0 = time.perf_counter()
     cell = run_cell(spec, "fedpbc", "bernoulli_ti")
     vmap_cold_s = time.perf_counter() - t0
@@ -43,14 +148,59 @@ def run(csv=True, *, rounds=100, m=32, n_seeds=8, seed0=0, out_path=None):
     cell = run_cell(spec, "fedpbc", "bernoulli_ti")
     vmap_warm_s = time.perf_counter() - t0
 
-    # --- sequential baseline: one run_training per seed (recompiles per call)
+    # --- seed axis: sequential baseline on the SAME protocol
     t0 = time.perf_counter()
-    seq_final = []
-    for sd in seeds:
-        traj, _ = run_training("fedpbc", "bernoulli_ti", rounds=rounds, m=m,
-                               seed=sd)
-        seq_final.append(traj[-1][1])
+    seq_evals = _sequential_seed_arm(spec, spec.lr)
     seq_s = time.perf_counter() - t0
+    traj_diff = float(np.abs(seq_evals - cell.test_acc).max())
+    # same data, same keys, same p_base -> the arms must agree (bitwise at
+    # equality-friendly shapes, tests/test_sweep.py; tolerance here because
+    # XLA CPU may reassociate reductions by ~1 ulp at other shapes).
+    # RuntimeError, not assert: the guarantee must survive `python -O`
+    if traj_diff > 1e-5:
+        raise RuntimeError(
+            f"sequential and vmapped trajectories diverged: {traj_diff}")
+
+    # --- hyperparameter axis: lr x alpha grid, traced vs per-value-recompile
+    ab_seeds = tuple(range(seed0, seed0 + ablation_seeds))
+    ab_rounds = ablation_rounds or max(rounds // 3, 20)
+    ab_spec = dataclasses.replace(
+        spec, seeds=ab_seeds, rounds=ab_rounds,
+        eval_every=min(25, ab_rounds), lrs=tuple(ablation_lrs),
+        alphas=tuple(ablation_alphas))
+    points = ab_spec.hparam_points()
+    n_cells = len(points) * ablation_seeds
+
+    t0 = time.perf_counter()
+    ab_cells = run_cell_batch(ab_spec, "fedpbc", "bernoulli_ti")
+    traced_cold_s = time.perf_counter() - t0
+    from repro.experiments.grid import _runner_for, get_traced_task
+    traced_runner = _runner_for(
+        ab_spec, ab_spec.cell_config("fedpbc", "bernoulli_ti"),
+        get_traced_task(ab_spec), ("loss", "num_active"))
+    traced_compiles = _cache_entries(traced_runner)
+
+    # steady state: an ablation at ENTIRELY different values (same grid
+    # shape) must reuse the compile — this, not the cold run, is what the
+    # per-value-recompile path can never do (it recompiles per new value)
+    new_spec = dataclasses.replace(
+        ab_spec, lrs=tuple(lr * 1.3 for lr in ablation_lrs),
+        alphas=tuple(a * 3.0 for a in ablation_alphas))
+    t0 = time.perf_counter()
+    run_cell_batch(new_spec, "fedpbc", "bernoulli_ti")
+    traced_new_values_s = time.perf_counter() - t0
+    traced_compiles_after = _cache_entries(traced_runner)
+    if traced_compiles_after != traced_compiles:
+        raise RuntimeError("new swept values triggered a recompile")
+
+    t0 = time.perf_counter()
+    baked_evals, baseline_compiles = _per_value_recompile_arm(ab_spec, points)
+    baseline_s = time.perf_counter() - t0
+    traced_evals = np.stack([c.test_acc for c in ab_cells])
+    ab_diff = float(np.abs(baked_evals - traced_evals).max())
+    if ab_diff > 1e-5:
+        raise RuntimeError(
+            f"traced-lr and baked-lr trajectories diverged: {ab_diff}")
 
     seq_cps = n_seeds / seq_s
     vmap_cps = n_seeds / vmap_warm_s
@@ -69,14 +219,32 @@ def run(csv=True, *, rounds=100, m=32, n_seeds=8, seed0=0, out_path=None):
         "vmapped_cold_cells_per_s": round(n_seeds / vmap_cold_s, 4),
         "speedup": round(vmap_cps / seq_cps, 2),
         "speedup_cold": round((n_seeds / vmap_cold_s) / seq_cps, 2),
-        # NOT directly comparable: the engine shares one data_seed=0 dataset
-        # across seeds (the sweep protocol), run_training rebuilds the
-        # dataset from each seed — these are plausibility checks, not an
-        # equivalence test (tests/test_sweep.py does bitwise equivalence)
-        "final_test_acc_vmapped_shared_data": round(
-            float(cell.test_acc[:, -1].mean()), 4),
-        "final_test_acc_sequential_per_seed_data": round(
-            sum(seq_final) / n_seeds, 4),
+        # both arms share one data protocol; their trajectories must agree
+        "final_test_acc": round(float(cell.test_acc[:, -1].mean()), 4),
+        "trajectory_max_abs_diff": traj_diff,
+        "hparam_ablation": {
+            "lrs": list(ablation_lrs),
+            "alphas": list(ablation_alphas),
+            "n_points": len(points),
+            "n_seeds": ablation_seeds,
+            "rounds": ab_rounds,
+            "n_cells": n_cells,
+            "traced_cold_seconds": round(traced_cold_s, 4),
+            "traced_new_values_seconds": round(traced_new_values_s, 4),
+            "per_value_recompile_seconds": round(baseline_s, 4),
+            "traced_cells_per_s": round(n_cells / traced_new_values_s, 4),
+            "traced_cold_cells_per_s": round(n_cells / traced_cold_s, 4),
+            "per_value_cells_per_s": round(n_cells / baseline_s, 4),
+            # jit cache entries across BOTH traced ablations (original and
+            # new-values): 2 (init+scan, ONE compile each) vs 2 per grid
+            # point for the per-value-recompile path; -1 if introspection is
+            # unavailable
+            "traced_compile_entries": traced_compiles,
+            "per_value_compile_entries": baseline_compiles,
+            "trajectory_max_abs_diff": ab_diff,
+            "speedup": round(baseline_s / traced_new_values_s, 2),
+            "speedup_first_run": round(baseline_s / traced_cold_s, 2),
+        },
         "backend": jax.default_backend(),
     }
     print("BENCH " + json.dumps(result), flush=True)

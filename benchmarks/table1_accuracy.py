@@ -1,9 +1,12 @@
 """Table 1: final train/test accuracy of all 7 algorithms under the six
 unreliable-uplink schemes (synthetic stand-in dataset; see common.py).
 
-Runs on the vectorized sweep engine: all seeds of one (scheme, algo) cell
-execute as ONE compiled program, results append to the JSONL/npz store under
-``benchmarks/out/sweeps`` (CSV stays as the console view).
+Runs on the batched sweep core: all trajectories of one (scheme, algo) cell
+— here a single hyperparameter point x all seeds — execute as ONE compiled
+program with the dataset, partition, lr, and Eq.-9 knobs as traced inputs,
+so re-running the table at a different lr/alpha reuses every compile.
+Results append to the JSONL/npz store under ``benchmarks/out/sweeps`` with
+their hyperparameter coordinates recorded (CSV stays as the console view).
 
 Default: 2 schemes x 7 algos x 1 seed at 250 rounds (CPU budget);
 --full runs all 6 schemes x 3 seeds."""

@@ -1,10 +1,12 @@
 """Table 2: first round to reach 1/4, 1/2, 3/4, 1 of the best test accuracy
 under Bernoulli time-varying links.
 
-The per-round eval trajectory comes from the sweep engine's in-scan eval
-cadence (``evals [S, E]`` at ``eval_rounds`` boundaries), so the whole
+The per-round eval trajectory comes from the batched sweep core's in-scan
+eval cadence (``evals [S, E]`` at ``eval_rounds`` boundaries), so the whole
 7-algorithm column runs as 7 compiled programs total — no per-eval host
-round-trips."""
+round-trips. Like table 1 it occupies a single point on the engine's
+hyperparameter axis; its compiled programs are shared with any lr/alpha
+ablation of the same protocol."""
 from __future__ import annotations
 
 import numpy as np

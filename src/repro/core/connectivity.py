@@ -7,6 +7,14 @@ homogeneous and non-homogeneous / reset and no-reset variants.
 
 All processes are functional and jit-able: ``sample(state, t, key)``
 returns ``(active_mask [m] bool, p_t [m], new_state)``.
+
+The Eq.-9 dynamics knobs ``gamma`` (fluctuation amplitude) and ``period``
+(sine period) default to the values baked into ``FederationConfig``, but
+``make_link_process`` (and the per-scheme constructors) accept them as
+explicit overrides that may be *traced* scalars: the sweep engine builds the
+link process inside its compiled program from traced ``(p_base, gamma,
+period)`` inputs, so a gamma ablation reuses one compile instead of baking a
+new closure per value.
 """
 from __future__ import annotations
 
@@ -37,9 +45,17 @@ def build_base_probs(key, num_clients, num_classes, *, alpha=0.1, sigma0=10.0,
 
 
 def p_of_t(p_base, t, *, gamma, period):
-    """Eq. (9): p_i^t = p_i * [(1-gamma) + gamma * sin(2 pi t / P)]."""
+    """Eq. (9): p_i^t = p_i * [(1-gamma) + gamma * sin(2 pi t / P)].
+    ``gamma``/``period`` may be python floats or traced scalars."""
     eps = jnp.sin(2.0 * jnp.pi * t / period)
     return jnp.clip(p_base * ((1.0 - gamma) + gamma * eps), 0.0, 1.0)
+
+
+def _dynamics(cfg: FederationConfig, gamma, period):
+    """Resolve the Eq.-9 dynamics knobs: explicit (possibly traced) overrides
+    win over the config's static values."""
+    return (cfg.gamma if gamma is None else gamma,
+            cfg.period if period is None else period)
 
 
 # ---------------------------------------------------------------------------
@@ -54,27 +70,31 @@ class LinkProcess:
     name: str = ""
 
 
-def bernoulli_process(p_base, cfg: FederationConfig) -> LinkProcess:
+def bernoulli_process(p_base, cfg: FederationConfig, *, gamma=None,
+                      period=None) -> LinkProcess:
     tv = cfg.time_varying
+    gamma, period = _dynamics(cfg, gamma, period)
 
     def init(key):
         return ()
 
     def sample(state, t, key):
-        p_t = p_of_t(p_base, t, gamma=cfg.gamma, period=cfg.period) if tv else p_base
+        p_t = p_of_t(p_base, t, gamma=gamma, period=period) if tv else p_base
         active = jax.random.uniform(key, p_base.shape) < p_t
         return active, p_t, state
 
     return LinkProcess(init, sample, f"bernoulli_{'tv' if tv else 'ti'}")
 
 
-def markov_process(p_base, cfg: FederationConfig) -> LinkProcess:
+def markov_process(p_base, cfg: FederationConfig, *, gamma=None,
+                   period=None) -> LinkProcess:
     """Two-state ON/OFF chain, Table 3 transition construction.
 
     Homogeneous: transitions from time-invariant p_i.
     Non-homogeneous: transitions re-derived from time-varying p_i^t.
     """
     tv = cfg.time_varying
+    gamma, period = _dynamics(cfg, gamma, period)
 
     def transitions(p_t):
         p_t = jnp.clip(p_t, 1e-4, 1 - 1e-4)
@@ -88,7 +108,7 @@ def markov_process(p_base, cfg: FederationConfig) -> LinkProcess:
         return on
 
     def sample(on, t, key):
-        p_t = p_of_t(p_base, t, gamma=cfg.gamma, period=cfg.period) if tv else p_base
+        p_t = p_of_t(p_base, t, gamma=gamma, period=period) if tv else p_base
         q, q_star = transitions(p_t)
         u = jax.random.uniform(key, p_base.shape)
         new_on = jnp.where(on, u >= q, u < q_star)
@@ -97,7 +117,8 @@ def markov_process(p_base, cfg: FederationConfig) -> LinkProcess:
     return LinkProcess(init, sample, f"markov_{'nonhom' if tv else 'hom'}")
 
 
-def cyclic_process(p_base, cfg: FederationConfig) -> LinkProcess:
+def cyclic_process(p_base, cfg: FederationConfig, *, gamma=None,
+                   period=None) -> LinkProcess:
     """Fig. 5: link active for p_i*L of every cycle of length L, after a random
     offset drawn once (no reset) or redrawn every cycle (periodic reset).
 
@@ -108,6 +129,7 @@ def cyclic_process(p_base, cfg: FederationConfig) -> LinkProcess:
     """
     L = cfg.cyclic_length
     tv = cfg.time_varying
+    gamma, period = _dynamics(cfg, gamma, period)
 
     def init(key):
         off = jax.random.uniform(key, p_base.shape) * (1.0 - p_base) * L
@@ -122,17 +144,21 @@ def cyclic_process(p_base, cfg: FederationConfig) -> LinkProcess:
         else:
             off = state["offset"]
         active = (phase >= off) & (phase < off + p_base * L)
-        p_t = p_of_t(p_base, t, gamma=cfg.gamma, period=cfg.period) if tv else p_base
+        p_t = p_of_t(p_base, t, gamma=gamma, period=period) if tv else p_base
         return active, p_t, state
 
     return LinkProcess(init, sample, f"cyclic_{'reset' if cfg.cyclic_reset else 'noreset'}")
 
 
-def make_link_process(p_base, cfg: FederationConfig) -> LinkProcess:
+def make_link_process(p_base, cfg: FederationConfig, *, gamma=None,
+                      period=None) -> LinkProcess:
+    """Build the configured scheme's process. ``gamma``/``period`` override
+    the config's Eq.-9 dynamics and may be traced scalars (see module doc)."""
+    kw = dict(gamma=gamma, period=period)
     if cfg.scheme == "bernoulli":
-        return bernoulli_process(p_base, cfg)
+        return bernoulli_process(p_base, cfg, **kw)
     if cfg.scheme == "markov":
-        return markov_process(p_base, cfg)
+        return markov_process(p_base, cfg, **kw)
     if cfg.scheme == "cyclic":
-        return cyclic_process(p_base, cfg)
+        return cyclic_process(p_base, cfg, **kw)
     raise ValueError(cfg.scheme)

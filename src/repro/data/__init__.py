@@ -4,6 +4,7 @@ from repro.data.sources import (
     classification_source,
     fixed_source,
     lm_source,
+    traced_classification_source,
 )
 from repro.data.synthetic import (
     federated_classification_batches,
@@ -20,4 +21,5 @@ __all__ = [
     "classification_source",
     "fixed_source",
     "lm_source",
+    "traced_classification_source",
 ]

@@ -61,6 +61,38 @@ def classification_source(x, y, client_idx, *, local_steps: int,
     return DataSource(init, sample, "classification")
 
 
+def traced_classification_source(shared, *, local_steps: int,
+                                 batch_size: int) -> DataSource:
+    """Traced counterpart of ``classification_source``: nothing about the
+    dataset is a jit constant.
+
+    The dataset arrays travel in ``shared`` (``{"x": [n, ...], "y": [n]}``,
+    typically traced jit inputs — the factory is meant to be called *inside*
+    a traced function, mirroring the sweep engine's ``link_factory``), and the
+    per-client partition travels in ``ds_state`` (``{"idx": [m, per_client]}``),
+    so a Dirichlet-alpha re-partition or a dataset swap of the same shapes
+    reuses the compiled program instead of rebuilding it.
+
+    ``init(key, data) -> ds_state`` takes the per-trajectory data pytree (the
+    batched-runner protocol; the key is accepted for signature symmetry and
+    unused). ``sample`` draws the same indices as ``classification_source`` —
+    given equal arrays the two sources produce bit-for-bit equal batches.
+    """
+
+    def init(key, data):
+        return data
+
+    def sample(ds_state, t, key):
+        client_idx = ds_state["idx"]
+        m, per_client = client_idx.shape
+        pick = jax.random.randint(
+            key, (m, local_steps, batch_size), 0, per_client)
+        sel = client_idx[jnp.arange(m)[:, None, None], pick]
+        return {"x": shared["x"][sel], "y": shared["y"][sel]}, ds_state
+
+    return DataSource(init, sample, "classification_traced")
+
+
 def lm_source(*, num_clients: int, local_steps: int, batch: int, seq: int,
               vocab: int, client_shift: bool = True,
               memory_shape: Optional[Tuple[int, ...]] = None) -> DataSource:

@@ -1,29 +1,40 @@
 """Vectorized experiment sweeps: grid specs -> device-batched simulations.
 
-- ``sweep``   — ``make_vmap_run_rounds``: S seeds of one (algo, scheme) cell
-  as ONE compiled program (vmap over the seed axis), plus the sweep CLI.
-- ``grid``    — ``SweepSpec`` grids, the executor, compile/task caches.
-- ``results`` — append-only JSONL/npz results store with mean/CI summaries.
-- ``tasks``   — the shared synthetic classification task the suites run on.
+- ``sweep``   — ``make_batched_run_rounds``: all (hyperparameter point x
+  seed) trajectories of one (algo, scheme) cell as ONE compiled program over
+  a traced ``CellBatch``; ``make_vmap_run_rounds`` is the single-point
+  seed-axis wrapper; plus the sweep CLI.
+- ``grid``    — ``SweepSpec`` grids (with ``lrs``/``gammas``/``alphas``/
+  ``sigma0s``/``deltas`` axes), the executor, structure-only compile caches.
+- ``results`` — append-only JSONL/npz results store with mean/CI summaries,
+  cross-store ``merge`` + CLI.
+- ``plots``   — figure-style curve CSV exports straight from a store.
+- ``tasks``   — the shared synthetic task (constant and traced variants).
 """
 from repro.experiments.grid import (
     ALGOS,
+    HPARAM_FIELDS,
     SCHEMES,
     CellResult,
     SweepSpec,
     run_cell,
+    run_cell_batch,
     run_sweep,
 )
 from repro.experiments.results import ResultsStore, git_sha, summarize
 from repro.experiments.sweep import (
+    CellBatch,
     eval_rounds,
+    make_batched_run_rounds,
     make_vmap_run_rounds,
     seed_keys,
     stack_seed_keys,
 )
 from repro.experiments.tasks import (
     ClassificationTask,
+    TracedClassificationTask,
     make_classification_task,
+    make_traced_classification_task,
     mlp_accuracy,
     mlp_init,
     mlp_loss,
@@ -31,20 +42,26 @@ from repro.experiments.tasks import (
 
 __all__ = [
     "ALGOS",
+    "HPARAM_FIELDS",
     "SCHEMES",
     "CellResult",
     "SweepSpec",
     "run_cell",
+    "run_cell_batch",
     "run_sweep",
     "ResultsStore",
     "git_sha",
     "summarize",
+    "CellBatch",
     "eval_rounds",
+    "make_batched_run_rounds",
     "make_vmap_run_rounds",
     "seed_keys",
     "stack_seed_keys",
     "ClassificationTask",
+    "TracedClassificationTask",
     "make_classification_task",
+    "make_traced_classification_task",
     "mlp_accuracy",
     "mlp_init",
     "mlp_loss",

@@ -1,24 +1,30 @@
 """Declarative sweep grids: ``SweepSpec`` -> batched device simulations.
 
-A paper table is a grid of ``(algorithm x unreliable-link scheme x seed)``
-cells. The executor walks the *algorithm x scheme* axes in Python — distinct
-algorithms / schemes carry distinct ``algo_state`` / ``link_state`` pytree
-structures and aggregation code, so they are necessarily separate compiles —
-and collapses the *seed* axis inside each cell with the vmapped runner
-(``repro.experiments.sweep.make_vmap_run_rounds``): S seeds run as one
-compiled program.
+A paper evaluation is a grid of ``(algorithm x unreliable-link scheme x
+hyperparameter point x seed)`` cells. The executor walks only the *algorithm
+x scheme* axes in Python — distinct algorithms / schemes carry distinct
+``algo_state`` / ``link_state`` pytree structures and aggregation code, so
+they are necessarily separate compiles — and collapses EVERY other swept axis
+inside one compiled program per cell
+(``repro.experiments.sweep.make_batched_run_rounds``): the hyperparameter
+axes (``lrs x gammas x alphas x sigma0s x deltas``) are flattened with the
+seed axis into a single leading batch dimension.
 
-Compiled runners (and the shared device-resident task behind them) are
-memoized in module-level caches keyed by everything that changes the compiled
-program. Eq.-9 knobs (``sigma0``, ``delta``) only shape the traced per-seed
-``p_base`` input, so e.g. the fig-8 delta/sigma0 ablations reuse ONE compile
-across all swept values; ``alpha`` additionally re-partitions the dataset
-(a jit constant) and so rebuilds the task.
+Nothing swept is a compile-time constant: lr and gamma/period are traced
+scalars consumed by factories inside the trace, sigma0/delta (and alpha's
+effect on connectivity) only shape the traced per-trajectory ``p_base``
+input, alpha's Dirichlet re-partition travels as the traced ``ds_state``
+index table, and the dataset arrays themselves are traced ``shared`` inputs.
+Compiled runners are memoized in a module-level cache whose key is therefore
+*structure-only* — e.g. the fig-8 alpha/gamma/delta/sigma0 ablations and an
+LR search all reuse ONE compile per (algorithm, scheme)
+(``tests/test_traced_axes.py`` counts the compiles).
 """
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass
+import itertools
+from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
@@ -30,11 +36,17 @@ from repro.core.algorithms import ALGORITHMS, make_algorithm
 from repro.core.connectivity import build_base_probs, make_link_process
 from repro.experiments.results import ResultsStore, summarize
 from repro.experiments.sweep import (
+    CellBatch,
     eval_rounds,
-    make_vmap_run_rounds,
+    make_batched_run_rounds,
     stack_seed_keys,
 )
-from repro.experiments.tasks import ClassificationTask, make_classification_task
+from repro.experiments.tasks import (
+    ClassificationTask,
+    TracedClassificationTask,
+    make_classification_task,
+    make_traced_classification_task,
+)
 from repro.optim import paper_decay, sgd
 
 # The paper's evaluation grid (§7.2): 7 algorithms x 6 link schemes.
@@ -50,10 +62,22 @@ SCHEMES = {
     "cyclic_reset": dict(scheme="cyclic", cyclic_reset=True),
 }
 
+# The swept-inside-one-compile knobs, in flattening order: a hyperparameter
+# point is one (lr, gamma, alpha, sigma0, delta) combination.
+HPARAM_FIELDS = ("lr", "gamma", "alpha", "sigma0", "delta")
+
 
 @dataclass(frozen=True)
 class SweepSpec:
-    """One declarative grid: which cells to run and with what protocol."""
+    """One declarative grid: which cells to run and with what protocol.
+
+    The scalar fields (``lr``, ``gamma``, ``alpha``, ``sigma0``, ``delta``)
+    give the default hyperparameter point; the plural axes (``lrs``,
+    ``gammas``, ``alphas``, ``sigma0s``, ``deltas``) override them with a
+    swept list whose cartesian product is flattened — together with ``seeds``
+    — into the one batch axis of the compiled cell program. An empty axis
+    means "use the scalar field".
+    """
 
     algorithms: Tuple[str, ...] = ("fedpbc", "fedavg")
     schemes: Tuple[str, ...] = ("bernoulli_ti",)
@@ -70,6 +94,12 @@ class SweepSpec:
     sigma0: float = 10.0
     delta: float = 0.02
     gamma: float = 0.5
+    # hyperparameter axes (traced; empty tuple -> the scalar field above)
+    lrs: Tuple[float, ...] = ()
+    gammas: Tuple[float, ...] = ()
+    alphas: Tuple[float, ...] = ()
+    sigma0s: Tuple[float, ...] = ()
+    deltas: Tuple[float, ...] = ()
     # shared-dataset / model knobs
     data_seed: int = 0
     dim: int = 32
@@ -82,6 +112,14 @@ class SweepSpec:
     # (("fedau_K", 100), ("period", 20)))
     fed_overrides: Tuple[Tuple[str, Any], ...] = ()
 
+    def hparam_points(self) -> List[Dict[str, float]]:
+        """The flattened hyperparameter grid: one dict per point, in
+        ``itertools.product`` order over ``HPARAM_FIELDS``."""
+        axes = [tuple(getattr(self, f + "s")) or (getattr(self, f),)
+                for f in HPARAM_FIELDS]
+        return [dict(zip(HPARAM_FIELDS, combo))
+                for combo in itertools.product(*axes)]
+
     def cell_config(self, algo: str, scheme: str) -> FederationConfig:
         if scheme not in SCHEMES:
             raise KeyError(f"unknown scheme {scheme!r}; available: "
@@ -90,15 +128,15 @@ class SweepSpec:
             raise KeyError(f"unknown algorithm {algo!r}; available: "
                            f"{sorted(ALGORITHMS)}")
         overrides = dict(self.fed_overrides)
-        # alpha/sigma0/delta shape the dataset partition and the Eq.-9 p_base
-        # draw, which the executor builds from the SPEC fields — an override
-        # here would reach FederationConfig but never the simulation, a
-        # silent no-op. Force them through the spec fields instead.
-        data_knobs = {"alpha", "sigma0", "delta"} & set(overrides)
+        # lr/alpha/sigma0/delta/gamma are hyperparameter-point knobs the
+        # executor feeds the program as traced inputs — an override here would
+        # reach FederationConfig but never the simulation, a silent no-op.
+        # Force them through the spec fields / axes instead.
+        data_knobs = {"alpha", "sigma0", "delta", "gamma"} & set(overrides)
         if data_knobs:
             raise ValueError(
-                f"set {sorted(data_knobs)} via SweepSpec fields, not "
-                f"fed_overrides (they only affect the task / p_base inputs)")
+                f"set {sorted(data_knobs)} via SweepSpec fields or axes, not "
+                f"fed_overrides (they are traced hyperparameter inputs)")
         kw: Dict[str, Any] = dict(
             algorithm=algo, num_clients=self.num_clients,
             local_steps=self.local_steps, gamma=self.gamma, delta=self.delta,
@@ -109,7 +147,8 @@ class SweepSpec:
 
 @dataclass
 class CellResult:
-    """One grid cell's S-seed outcome (host-side numpy)."""
+    """One grid cell's S-seed outcome at one hyperparameter point
+    (host-side numpy)."""
 
     algo: str
     scheme: str
@@ -120,6 +159,8 @@ class CellResult:
     train_acc: np.ndarray           # [S] final train accuracy
     loss: np.ndarray                # [S, K] per-round mean train loss
     num_active: np.ndarray          # [S, K] active-client counts
+    # the point's coordinates on the swept axes (lr/gamma/alpha/sigma0/delta)
+    hparams: Dict[str, float] = field(default_factory=dict)
 
     def final_test(self, window: int = 3) -> np.ndarray:
         """Per-seed mean test accuracy over the last ``window`` evals (the
@@ -133,21 +174,27 @@ class CellResult:
 
 
 # --------------------------------------------------------------------------
-# Executor with cross-cell compile/task caches
+# Executor with cross-cell compile/task/partition caches
 # --------------------------------------------------------------------------
 
 _TASK_CACHE: Dict[tuple, ClassificationTask] = {}
+_TRACED_TASK_CACHE: Dict[tuple, TracedClassificationTask] = {}
+_PARTITION_CACHE: Dict[tuple, np.ndarray] = {}
 _RUNNER_CACHE: Dict[tuple, Any] = {}
 
 
 def _task_key(spec: SweepSpec) -> tuple:
+    """Structural dataset/model identity — deliberately alpha-free (the
+    partition is a per-point traced input, not part of the task)."""
     return (spec.data_seed, spec.num_clients, spec.dim, spec.classes,
-            spec.hidden, spec.n_per_class, spec.n_train, spec.alpha,
+            spec.hidden, spec.n_per_class, spec.n_train,
             spec.per_client, spec.local_steps, spec.batch_size)
 
 
 def get_task(spec: SweepSpec) -> ClassificationTask:
-    key = _task_key(spec)
+    """The constant-capturing task at the spec's scalar alpha (kept for the
+    sequential baselines; the executor itself runs on ``get_traced_task``)."""
+    key = _task_key(spec) + (spec.alpha,)
     if key not in _TASK_CACHE:
         _TASK_CACHE[key] = make_classification_task(
             data_seed=spec.data_seed, num_clients=spec.num_clients,
@@ -158,19 +205,47 @@ def get_task(spec: SweepSpec) -> ClassificationTask:
     return _TASK_CACHE[key]
 
 
+def get_traced_task(spec: SweepSpec) -> TracedClassificationTask:
+    key = _task_key(spec)
+    if key not in _TRACED_TASK_CACHE:
+        _TRACED_TASK_CACHE[key] = make_traced_classification_task(
+            data_seed=spec.data_seed, num_clients=spec.num_clients,
+            dim=spec.dim, classes=spec.classes, hidden=spec.hidden,
+            n_per_class=spec.n_per_class, n_train=spec.n_train,
+            per_client=spec.per_client, local_steps=spec.local_steps,
+            batch_size=spec.batch_size)
+    return _TRACED_TASK_CACHE[key]
+
+
+def get_partition(spec: SweepSpec, alpha: float) -> np.ndarray:
+    """Cached Dirichlet(alpha) index table for the spec's dataset."""
+    key = _task_key(spec) + (alpha,)
+    if key not in _PARTITION_CACHE:
+        _PARTITION_CACHE[key] = get_traced_task(spec).partition(alpha)
+    return _PARTITION_CACHE[key]
+
+
 def _runner_for(spec: SweepSpec, fed: FederationConfig, task,
                 metric_keys) -> Any:
-    # sigma0/delta (and alpha, via the task key) reach the program only
-    # through traced inputs — zero them so cells differing in just those
-    # knobs share one compiled runner
-    canon = dataclasses.replace(fed, alpha=0.0, sigma0=0.0, delta=0.0)
-    key = (_task_key(spec), canon, spec.rounds, spec.eval_every, spec.lr,
+    # Everything swept reaches the compiled program through traced inputs —
+    # zero the hyperparameter knobs so cells differing only in them share one
+    # compiled runner. The runner's closures keep a reference to `fed`, but
+    # consume only its structural fields (scheme, local_steps, num_clients,
+    # algorithm knobs): gamma/period go through traced hparams, and
+    # alpha/sigma0/delta never leave the host (they shape p_base / the
+    # partition, both batch inputs).
+    canon = dataclasses.replace(fed, alpha=0.0, sigma0=0.0, delta=0.0,
+                                gamma=0.0, period=0)
+    key = (_task_key(spec), canon, spec.rounds, spec.eval_every,
            tuple(metric_keys))
     if key not in _RUNNER_CACHE:
         algo = make_algorithm(fed)
-        _RUNNER_CACHE[key] = make_vmap_run_rounds(
-            task.loss_fn, sgd(paper_decay(spec.lr)), algo, fed, task.source,
-            link_factory=lambda p: make_link_process(p, fed),
+        _RUNNER_CACHE[key] = make_batched_run_rounds(
+            task.loss_fn, algo, fed,
+            optimizer_factory=lambda hp: sgd(paper_decay(hp["lr"])),
+            link_factory=lambda p, hp: make_link_process(
+                p, fed, gamma=hp["gamma"], period=hp["period"]),
+            source_factory=task.source_factory,
             init_params=task.init_params,
             num_rounds=spec.rounds,
             eval_every=spec.eval_every,
@@ -179,43 +254,128 @@ def _runner_for(spec: SweepSpec, fed: FederationConfig, task,
     return _RUNNER_CACHE[key]
 
 
-def seed_base_probs(spec: SweepSpec) -> jnp.ndarray:
-    """Per-seed Eq.-9 connection-probability draws, stacked to [S, m]."""
+def point_base_probs(spec: SweepSpec, point: Dict[str, float]) -> jnp.ndarray:
+    """Per-seed Eq.-9 connection-probability draws for one hyperparameter
+    point, stacked to [S, m]. The per-seed key protocol (PRNGKey(seed)) is the
+    historical one, so the default point reproduces ``seed_base_probs``."""
     return jnp.stack([
         build_base_probs(jax.random.PRNGKey(s), spec.num_clients,
-                         spec.classes, alpha=spec.alpha, sigma0=spec.sigma0,
-                         delta=spec.delta)[0]
+                         spec.classes, alpha=point["alpha"],
+                         sigma0=point["sigma0"], delta=point["delta"])[0]
         for s in spec.seeds])
 
 
-def run_cell(spec: SweepSpec, algo: str, scheme: str, *,
-             metric_keys=("loss", "num_active")) -> CellResult:
-    """Run one (algo, scheme) cell: S seeds in one vmapped program."""
-    task = get_task(spec)
+def seed_base_probs(spec: SweepSpec) -> jnp.ndarray:
+    """[S, m] draws at the spec's scalar (default) hyperparameter point."""
+    return point_base_probs(
+        spec, dict(alpha=spec.alpha, sigma0=spec.sigma0, delta=spec.delta))
+
+
+_BATCH_CACHE: Dict[tuple, tuple] = {}
+
+
+def _batch_parts(spec: SweepSpec) -> tuple:
+    """The fed-independent pieces of a cell batch (keys, p_base, lr/gamma
+    arrays, partition stack), memoized per (dataset, seeds, points): a full
+    grid calls ``make_cell_batch`` once per (algorithm, scheme) cell, and
+    only the ``period`` array can differ between those calls."""
+    points = spec.hparam_points()
+    key = (_task_key(spec), spec.seeds,
+           tuple(tuple(sorted(pt.items())) for pt in points))
+    if key not in _BATCH_CACHE:
+        S = len(spec.seeds)
+        seed_bundle = stack_seed_keys(spec.seeds)
+        keys = jax.tree.map(lambda k: jnp.concatenate([k] * len(points)),
+                            seed_bundle)
+        # the Eq.-9 draw depends only on (alpha, sigma0, delta): memoize so
+        # an lr/gamma-only ablation doesn't redo the sampling per point
+        probs_memo: Dict[tuple, jnp.ndarray] = {}
+
+        def probs(pt):
+            k = (pt["alpha"], pt["sigma0"], pt["delta"])
+            if k not in probs_memo:
+                probs_memo[k] = point_base_probs(spec, pt)
+            return probs_memo[k]
+
+        p_base = jnp.concatenate([probs(pt) for pt in points])
+        lr = jnp.asarray([pt["lr"] for pt in points for _ in range(S)],
+                         jnp.float32)
+        gamma = jnp.asarray([pt["gamma"] for pt in points for _ in range(S)],
+                            jnp.float32)
+        idx = jnp.asarray(np.stack([get_partition(spec, pt["alpha"])
+                                    for pt in points for _ in range(S)]))
+        _BATCH_CACHE[key] = (keys, p_base, lr, gamma, idx)
+    return _BATCH_CACHE[key]
+
+
+def make_cell_batch(spec: SweepSpec, fed: FederationConfig,
+                    task: TracedClassificationTask) -> CellBatch:
+    """Flatten (hyperparameter point x seed) into one [B]-leading batch,
+    point-major: ``b = point_index * len(seeds) + seed_index``."""
+    keys, p_base, lr, gamma, idx = _batch_parts(spec)
+    hparams = {
+        "lr": lr,
+        "gamma": gamma,
+        "period": jnp.full((lr.shape[0],), float(fed.period), jnp.float32),
+    }
+    return CellBatch(keys=keys, p_base=p_base, hparams=hparams,
+                     data={"idx": idx}, shared=task.shared)
+
+
+def run_cell_batch(spec: SweepSpec, algo: str, scheme: str, *,
+                   metric_keys=("loss", "num_active")) -> List[CellResult]:
+    """Run one (algo, scheme) cell: ALL hyperparameter points x seeds in one
+    batched program; returns one ``CellResult`` per point."""
+    task = get_traced_task(spec)
     fed = spec.cell_config(algo, scheme)
     runner = _runner_for(spec, fed, task, metric_keys)
-    keys = stack_seed_keys(spec.seeds)
-    p_base = seed_base_probs(spec)
-    states, out = runner(keys, p_base)
+    batch = make_cell_batch(spec, fed, task)
+    states, out = runner(batch)
+
+    points = spec.hparam_points()
+    S = len(spec.seeds)
     if "evals" in out:
         test_acc = np.asarray(out["evals"])
         rounds_at = eval_rounds(spec.rounds, spec.eval_every)
     else:
-        test_acc = np.asarray(jax.vmap(task.eval_test)(states.server))[:, None]
+        test_acc = np.asarray(jax.vmap(task.eval_test, in_axes=(0, None))(
+            states.server, task.shared))[:, None]
         rounds_at = [spec.rounds]
-    train_acc = np.asarray(jax.vmap(task.eval_train)(states.server))
+    train_acc = np.asarray(jax.vmap(task.eval_train, in_axes=(0, None))(
+        states.server, task.shared))
     mets = {k: np.asarray(v) for k, v in out["metrics"].items()}
-    return CellResult(
-        algo=algo, scheme=scheme, seeds=tuple(spec.seeds), rounds=spec.rounds,
-        eval_rounds=rounds_at, test_acc=test_acc, train_acc=train_acc,
-        loss=mets.get("loss", np.zeros((len(spec.seeds), 0))),
-        num_active=mets.get("num_active", np.zeros((len(spec.seeds), 0))))
+
+    def rows(a, pi):
+        return a[pi * S:(pi + 1) * S]
+
+    return [
+        CellResult(
+            algo=algo, scheme=scheme, seeds=tuple(spec.seeds),
+            rounds=spec.rounds, eval_rounds=rounds_at,
+            test_acc=rows(test_acc, pi), train_acc=rows(train_acc, pi),
+            loss=rows(mets.get("loss", np.zeros((len(points) * S, 0))), pi),
+            num_active=rows(
+                mets.get("num_active", np.zeros((len(points) * S, 0))), pi),
+            hparams=dict(pt))
+        for pi, pt in enumerate(points)]
+
+
+def run_cell(spec: SweepSpec, algo: str, scheme: str, *,
+             metric_keys=("loss", "num_active")) -> CellResult:
+    """Single-point convenience wrapper around ``run_cell_batch``."""
+    n_points = len(spec.hparam_points())
+    if n_points != 1:       # before compiling/running anything
+        raise ValueError(
+            f"spec has {n_points} hyperparameter points; use "
+            f"run_cell_batch for swept axes")
+    return run_cell_batch(spec, algo, scheme, metric_keys=metric_keys)[0]
 
 
 def run_sweep(spec: SweepSpec, *, store: Optional[ResultsStore] = None,
               suite: str = "sweep",
               metric_keys=("loss", "num_active")) -> List[CellResult]:
-    """Execute the full grid; optionally append every cell to ``store``."""
+    """Execute the full grid; optionally append every (cell, hyperparameter
+    point) row to ``store`` with its coordinates recorded."""
     # validate every cell upfront — a typo in the last algorithm must not
     # surface as a KeyError after earlier cells ran for minutes
     for scheme in spec.schemes:
@@ -224,18 +384,20 @@ def run_sweep(spec: SweepSpec, *, store: Optional[ResultsStore] = None,
     cells = []
     for scheme in spec.schemes:
         for algo in spec.algorithms:
-            cell = run_cell(spec, algo, scheme, metric_keys=metric_keys)
-            cells.append(cell)
-            if store is not None:
-                store.append(
-                    {"suite": suite, "algo": algo, "scheme": scheme,
-                     "seeds": list(spec.seeds), "rounds": spec.rounds,
-                     "eval_every": spec.eval_every,
-                     "spec": dataclasses.asdict(spec),
-                     "eval_rounds": cell.eval_rounds,
-                     "summary": cell.summary()},
-                    arrays={"test_acc": cell.test_acc,
-                            "train_acc": cell.train_acc,
-                            "loss": cell.loss,
-                            "num_active": cell.num_active})
+            for cell in run_cell_batch(spec, algo, scheme,
+                                       metric_keys=metric_keys):
+                cells.append(cell)
+                if store is not None:
+                    store.append(
+                        {"suite": suite, "algo": algo, "scheme": scheme,
+                         "seeds": list(spec.seeds), "rounds": spec.rounds,
+                         "eval_every": spec.eval_every,
+                         "hparams": dict(cell.hparams),
+                         "spec": dataclasses.asdict(spec),
+                         "eval_rounds": cell.eval_rounds,
+                         "summary": cell.summary()},
+                        arrays={"test_acc": cell.test_acc,
+                                "train_acc": cell.train_acc,
+                                "loss": cell.loss,
+                                "num_active": cell.num_active})
     return cells

@@ -1,0 +1,175 @@
+"""Figure-style curve exports straight from a results store — no re-runs.
+
+The table/figure benchmarks already persist per-seed trajectories
+(``test_acc [S, E]``, ``loss [S, K]``) next to every record; this module
+turns them into the fig-3 / fig-8 style curve files (mean ± normal-approx
+95% CI over the seed axis) without executing a single round:
+
+    from repro.experiments.plots import export_curves
+    export_curves(ResultsStore("benchmarks/out/sweeps"), "benchmarks/out/curves",
+                  suite="table1")
+
+or::
+
+    python -m repro.experiments.plots --store benchmarks/out/sweeps \
+        --out benchmarks/out/curves --suite fig8_alpha
+
+Records sharing a curve identity (same suite/algo/scheme/rounds/hparams but
+e.g. different seed batches from different sessions) are pooled along the
+seed axis before summarizing. Output is dependency-free CSV: one
+``<slug>_acc.csv`` (round, mean, std, ci95, n_seeds) and one
+``<slug>_loss.csv`` per curve.
+"""
+from __future__ import annotations
+
+import hashlib
+import math
+import os
+from typing import Any, Dict, List
+
+import numpy as np
+
+from repro.experiments.results import ResultsStore, cell_key
+
+
+def _curve_key(record: Dict[str, Any]) -> tuple:
+    """Curve identity: ``cell_key`` minus the seed set, so records of
+    different seed batches pool along the seed axis while every
+    protocol-distinguishing field still separates curves."""
+    suite, algo, scheme, _seeds, rounds, ee, hp, proto = cell_key(record)
+    return (suite, algo, scheme, rounds, ee, hp, proto)
+
+
+def _slug(key: tuple) -> str:
+    """Filename for one curve. Every component of ``_curve_key`` must reach
+    the name or distinct curves would overwrite each other's CSVs: the
+    human-readable parts come first (hparams rendered at %g precision for
+    the eye), and the EXACT hparam + protocol values are folded into a short
+    digest suffix so curves differing only beyond display precision (e.g.
+    logspace-generated lrs) still get distinct files."""
+    suite, algo, scheme, rounds, ee, hp, proto = key
+    parts = [str(suite), str(algo), str(scheme), f"r{rounds}", f"e{ee}"]
+    parts += [f"{k}{v:g}" for k, v in hp]
+    if hp or proto:
+        parts.append(
+            "p" + hashlib.md5(repr((hp, proto)).encode()).hexdigest()[:6])
+    return "-".join(p.replace("/", "_").replace(" ", "") for p in parts)
+
+
+def _summarize_rows(a: np.ndarray):
+    """[S, T] -> (mean [T], std [T], ci95 [T]) over the seed axis."""
+    s = a.shape[0]
+    mean = a.mean(axis=0)
+    std = a.std(axis=0, ddof=1) if s > 1 else np.zeros_like(mean)
+    ci95 = 1.96 * std / math.sqrt(s) if s > 1 else np.zeros_like(mean)
+    return mean, std, ci95
+
+
+def _write_curve(path: str, xs, a: np.ndarray) -> str:
+    mean, std, ci95 = _summarize_rows(a)
+    with open(path, "w") as f:
+        f.write("round,mean,std,ci95,n_seeds\n")
+        for x, m, sd, ci in zip(xs, mean, std, ci95):
+            f.write(f"{int(x)},{m:.6f},{sd:.6f},{ci:.6f},{a.shape[0]}\n")
+    return path
+
+
+def _pool_seed_rows(recs, payloads, name) -> "np.ndarray | None":
+    """Pool one array field across a curve's records along the seed axis,
+    deduplicating by seed: when two records carry the same seed (a later
+    session re-ran a superset batch), the later record's row wins — simple
+    concatenation would double-count the shared seeds and understate the CI.
+    Records without a usable ``seeds`` list contribute all rows under
+    synthetic never-colliding ids."""
+    rows: Dict[Any, np.ndarray] = {}
+    for i, (rec, p) in enumerate(zip(recs, payloads)):
+        arr = p.get(name)
+        if arr is None or arr.size == 0:
+            continue
+        seeds = rec.get("seeds")
+        if not isinstance(seeds, list) or len(seeds) != arr.shape[0]:
+            seeds = [("anon", i, j) for j in range(arr.shape[0])]
+        for s, row in zip(seeds, arr):
+            rows[_hashable_seed(s)] = row
+    return np.stack(list(rows.values())) if rows else None
+
+
+def _hashable_seed(s):
+    return tuple(s) if isinstance(s, list) else s
+
+
+def export_curves(store: ResultsStore, out_dir: str,
+                  **filters) -> List[str]:
+    """Emit accuracy/loss curve CSVs for every curve in ``store`` matching
+    ``filters`` (same semantics as ``store.records``); returns the written
+    paths. Records without array payloads — including records whose npz file
+    is missing on disk (partially copied store) — are skipped with a warning.
+
+    The store is append-only, so a re-run of the same cell appends a second
+    record with the same ``cell_key``: only the LATEST record per cell is
+    used (re-runs supersede), while records of different seed batches pool
+    along the seed axis (per-seed dedup, later records win on overlap)."""
+    import sys
+
+    # latest record per cell over ALL records — a later arrays-less record
+    # (e.g. merge kept its metadata after a lost npz) must SUPERSEDE an older
+    # run, not let the older run's stale arrays masquerade as current
+    latest: Dict[tuple, Dict[str, Any]] = {}
+    for rec in store.records(**filters):
+        latest[cell_key(rec)] = rec     # later append wins
+    groups: Dict[tuple, List[Dict[str, Any]]] = {}
+    for rec in latest.values():
+        if not rec.get("arrays"):
+            print(f"warning: skipping record {rec.get('record_id')} "
+                  f"(no array payload)", file=sys.stderr)
+            continue
+        groups.setdefault(_curve_key(rec), []).append(rec)
+    os.makedirs(out_dir, exist_ok=True)
+    written: List[str] = []
+    for key, group in groups.items():
+        recs, payloads = [], []
+        # append order (record_id) so later re-runs win per-seed dedup
+        for rec in sorted(group, key=lambda r: r.get("record_id", 0)):
+            try:
+                payloads.append(store.load_arrays(rec))
+                recs.append(rec)
+            except OSError as e:
+                print(f"warning: skipping record {rec.get('record_id')} "
+                      f"(missing arrays): {e}", file=sys.stderr)
+        if not recs:
+            continue
+        slug = _slug(key)
+        acc = _pool_seed_rows(recs, payloads, "test_acc")
+        if acc is not None:
+            rounds_at = recs[0].get(
+                "eval_rounds", list(range(1, acc.shape[1] + 1)))
+            written.append(_write_curve(
+                os.path.join(out_dir, f"{slug}_acc.csv"), rounds_at, acc))
+        loss = _pool_seed_rows(recs, payloads, "loss")
+        if loss is not None:
+            written.append(_write_curve(
+                os.path.join(out_dir, f"{slug}_loss.csv"),
+                range(1, loss.shape[1] + 1), loss))
+    return written
+
+
+def main(argv=None) -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.experiments.plots",
+        description="Export mean±CI curve CSVs from a results store "
+                    "(no cells are re-run).")
+    ap.add_argument("--store", required=True, help="results-store directory")
+    ap.add_argument("--out", required=True, help="output directory for CSVs")
+    ap.add_argument("--suite", default=None, help="only this suite tag")
+    args = ap.parse_args(argv)
+    filters = {"suite": args.suite} if args.suite else {}
+    written = export_curves(ResultsStore(args.store), args.out, **filters)
+    for path in written:
+        print(path)
+    print(f"# {len(written)} curve files -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,32 +1,47 @@
-"""Vmapped multi-seed experiment runner + the sweep CLI.
+"""Batched experiment runner (seed x hyperparameter axis) + the sweep CLI.
 
-One `(algorithm, link-scheme)` grid cell of a paper table is S seeded
-repetitions of the same program. ``make_vmap_run_rounds`` vmaps the ENTIRE
-per-seed pipeline —
+One `(algorithm, link-scheme)` grid cell of a paper table used to be S seeded
+repetitions of one program; with the hyperparameter axis it is B = P x S
+trajectories — P hyperparameter points (a flattened lr x gamma x alpha x
+sigma0 x delta product) times S seeds. ``make_batched_run_rounds`` vmaps the
+ENTIRE per-trajectory pipeline —
 
     init params -> init_fed_state -> K rounds (lax.scan) -> periodic eval
 
-— over a leading seed axis, so all S repetitions execute as ONE compiled
-device program: per-seed PRNG keys and per-seed Eq.-9 ``p_base`` vectors are
-batched inputs, the dataset is a shared jit constant, and metrics come back
-stacked ``[S, K, ...]`` (evals ``[S, E]``). Compared with the sequential
-per-seed loop (``benchmarks/common.run_training`` called S times) this
-removes S-1 compilations and all per-seed dispatch — the ``lax.scan`` engine
-of PR 1 collapsed the round axis; this collapses the seed axis on top of it.
+— over that one leading batch axis, so all B trajectories execute as ONE
+compiled device program. *Everything that varies within a sweep enters as a
+traced input*, carried by a ``CellBatch``:
 
-The link process is built INSIDE the vmapped function from the traced
-``p_base`` argument (``link_factory``), which is what lets seeds differ in
-their connection-probability draw without recompiling.
+- ``keys``     per-trajectory PRNG key bundles (leaves ``[B, 2]``);
+- ``p_base``   per-trajectory Eq.-9 connection probabilities ``[B, m]``
+  (alpha/sigma0/delta reach the program only through this input);
+- ``hparams``  per-trajectory traced scalars (``lr``, ``gamma``, ``period``)
+  the factories consume *inside* the trace — the optimizer's schedule and the
+  link process are built from traced values, not baked closures;
+- ``data``     per-trajectory ``ds_state`` (e.g. the Dirichlet(alpha)
+  partition ``idx [B, m, per_client]``);
+- ``shared``   the unbatched dataset arrays, traced but vmapped with
+  ``in_axes=None`` so B trajectories share one device copy.
+
+Only *structural* knobs still recompile: the algorithm / scheme pair (distinct
+``algo_state``/``link_state`` pytrees and aggregation code), round counts, and
+array shapes (num_clients, per_client, model dims, batch size).
+
+``make_vmap_run_rounds`` — the PR-2 seed-axis API — is a thin wrapper that
+runs a single-point batch with constant data/optimizer; migrated suites and
+its bit-for-bit guarantees are unchanged.
 
 CLI::
 
     PYTHONPATH=src python -m repro.experiments.sweep \
         --algos fedpbc,fedavg --schemes bernoulli_ti,markov_hom \
-        --seeds 0,1,2 --rounds 100 --clients 32 --out benchmarks/out/sweeps
+        --seeds 0,1,2 --lrs 0.05,0.1 --alphas 0.1,1.0 \
+        --rounds 100 --clients 32 --out benchmarks/out/sweeps
 """
 from __future__ import annotations
 
-from typing import Callable, Optional
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -39,6 +54,9 @@ from repro.core.federated import (
     make_round_fn,
     make_round_step,
 )
+from repro.data.sources import DataSource
+
+Pytree = Any
 
 
 def seed_keys(seed: int):
@@ -59,54 +77,96 @@ def stack_seed_keys(seeds):
     return jax.tree.map(lambda *ks: jnp.stack(ks), *bundles)
 
 
-def make_vmap_run_rounds(loss_fn: Callable, optimizer, algorithm: Algorithm,
-                         fed_cfg: FederationConfig, source, *,
-                         link_factory: Callable,
-                         init_params: Callable,
-                         num_rounds: int,
-                         eval_every: int = 0,
-                         eval_fn: Optional[Callable] = None,
-                         metric_keys=DEFAULT_METRIC_KEYS):
-    """Build the jitted S-seed runner for one grid cell.
+@dataclass
+class CellBatch:
+    """Everything one (algorithm, scheme) cell's compiled program consumes.
+
+    All fields are pytrees; ``keys``/``p_base``/``hparams``/``data`` carry a
+    leading ``[B]`` batch axis (B = points x seeds), ``shared`` is unbatched
+    (one device copy serves every trajectory). Registered as a pytree so a
+    batch can be sliced/saved/donated like any other JAX value.
+    """
+
+    keys: Pytree        # seed-key bundles, leaves [B, 2]
+    p_base: Pytree      # [B, m] Eq.-9 connection probabilities
+    hparams: Pytree     # dict of [B] traced scalars (lr, gamma, period, ...)
+    data: Pytree        # per-trajectory ds_state (leaves [B, ...])
+    shared: Pytree      # unbatched dataset arrays
+
+    @property
+    def batch_size(self) -> int:
+        return jax.tree.leaves(self.p_base)[0].shape[0]
+
+
+jax.tree_util.register_dataclass(
+    CellBatch,
+    data_fields=["keys", "p_base", "hparams", "data", "shared"],
+    meta_fields=[],
+)
+
+
+def make_batched_run_rounds(loss_fn: Callable, algorithm: Algorithm,
+                            fed_cfg: FederationConfig, *,
+                            optimizer_factory: Callable,
+                            link_factory: Callable,
+                            source_factory: Callable,
+                            init_params: Callable,
+                            num_rounds: int,
+                            eval_every: int = 0,
+                            eval_fn: Optional[Callable] = None,
+                            metric_keys=DEFAULT_METRIC_KEYS):
+    """Build the jitted B-trajectory runner for one grid cell.
 
     Args:
-      link_factory: ``p_base [m] -> LinkProcess`` (e.g.
-        ``lambda p: make_link_process(p, fed_cfg)``); called on the traced
-        per-seed probability vector inside the vmapped trace.
-      init_params: ``key -> model params`` (per-seed model init).
+      optimizer_factory: ``hparams -> Optimizer`` (e.g.
+        ``lambda hp: sgd(paper_decay(hp["lr"]))``); called on the traced
+        per-trajectory hparam scalars inside the trace, so swept LRs share one
+        compile.
+      link_factory: ``(p_base [m], hparams) -> LinkProcess`` (e.g.
+        ``lambda p, hp: make_link_process(p, fed_cfg, gamma=hp["gamma"])``).
+      source_factory: ``shared -> DataSource`` whose ``init(key, data)``
+        consumes the per-trajectory ``data`` pytree (see
+        ``repro.data.sources.traced_classification_source``).
+      init_params: ``key -> model params`` (per-trajectory model init).
       num_rounds: static total round count K.
-      eval_every / eval_fn: when both set, ``eval_fn(server_params)`` runs
-        every ``eval_every`` rounds *inside* the compiled program (plus once
-        at round K when K is not a multiple), and the result comes back as
-        ``out["evals"] [S, E]`` with boundaries ``eval_rounds(...)``.
+      eval_every / eval_fn: when both set, ``eval_fn(server_params, shared)``
+        runs every ``eval_every`` rounds *inside* the compiled program (plus
+        once at round K when K is not a multiple); the result comes back as
+        ``out["evals"] [B, E]`` with boundaries ``eval_rounds(...)``.
 
-    Returns ``run(keys, p_base) -> (states, out)`` where ``keys`` is a
-    ``stack_seed_keys`` bundle, ``p_base`` is ``[S, m]``, ``states`` is an
-    [S]-batched ``FedState`` and ``out["metrics"]`` maps each metric key to a
-    ``[S, K, ...]`` array. Bit-for-bit equal (per seed) to S independent
-    ``make_run_rounds`` trajectories with the same keys —
-    ``tests/test_sweep.py`` enforces this.
+    Returns ``run(batch: CellBatch) -> (states, out)`` where ``states`` is a
+    [B]-batched ``FedState`` and ``out["metrics"]`` maps each metric key to a
+    ``[B, K, ...]`` array. Each trajectory is bit-for-bit equal to an
+    independent sequential ``make_run_rounds`` run with the same key bundle
+    and that point's knobs baked as constants — ``tests/test_sweep.py`` and
+    ``tests/test_traced_axes.py`` enforce this.
 
     The runner is two compiled programs, not one: a (cheap) batched init and
-    the batched round scan, with the [S]-batched state passed BETWEEN them as
+    the batched round scan, with the [B]-batched state passed BETWEEN them as
     a device array. Fusing init into the same program as the scan lets XLA
     compile the scan body in a different fusion context, which on CPU can
     perturb float reductions by 1 ulp — the split keeps the scan stage's
     abstract signature identical in structure to ``make_run_rounds`` and is
-    what makes per-seed bitwise equality hold.
+    what makes per-trajectory bitwise equality hold. The two jitted stages
+    are exposed as ``run.init_batch`` / ``run.scan_batch`` so callers (the
+    compile-counter test, benchmarks) can read their compile-cache sizes.
     """
     do_eval = eval_fn is not None and eval_every > 0
     n_chunks, rem = divmod(num_rounds, eval_every) if do_eval else (0, num_rounds)
 
-    def init_seed(keys, p_base):
-        link = link_factory(p_base)
+    def init_point(keys, p_base, hparams, data, shared):
+        optimizer = optimizer_factory(hparams)
+        link = link_factory(p_base, hparams)
+        source = source_factory(shared)
         params = init_params(keys["params"])
         st = init_fed_state(keys["state"], params, fed_cfg, algorithm, link,
                             optimizer)
-        return st, source.init(keys["ds"])
+        return st, source.init(keys["ds"], data)
 
-    def scan_seed(st, ds, data_key, p_base):
-        link = link_factory(p_base)
+    def scan_point(st, ds, data_key, p_base, hparams, shared):
+        optimizer = optimizer_factory(hparams)
+        link = link_factory(p_base, hparams)
+        source = source_factory(shared)
         round_fn = make_round_fn(loss_fn, optimizer, algorithm, link, fed_cfg)
         step = make_round_step(round_fn, source)
 
@@ -124,7 +184,7 @@ def make_vmap_run_rounds(loss_fn: Callable, optimizer, algorithm: Algorithm,
 
         def chunk(carry, _):
             carry, mets = run_span(carry, eval_every)
-            return carry, (mets, eval_fn(carry[0].server))
+            return carry, (mets, eval_fn(carry[0].server, shared))
 
         carry, (mets, evals) = jax.lax.scan(chunk, (st, ds), None,
                                             length=n_chunks)
@@ -134,17 +194,64 @@ def make_vmap_run_rounds(loss_fn: Callable, optimizer, algorithm: Algorithm,
             carry, tail = run_span(carry, rem)
             mets = jax.tree.map(
                 lambda a, b: jnp.concatenate([a, b], 0), mets, tail)
-            evals = jnp.concatenate([evals, eval_fn(carry[0].server)[None]])
+            evals = jnp.concatenate(
+                [evals, eval_fn(carry[0].server, shared)[None]])
         st, ds = carry
         return st, {"metrics": mets, "evals": evals}
 
-    init_batch = jax.jit(jax.vmap(init_seed))
-    scan_batch = jax.jit(jax.vmap(scan_seed))
+    init_batch = jax.jit(jax.vmap(init_point, in_axes=(0, 0, 0, 0, None)))
+    scan_batch = jax.jit(jax.vmap(scan_point, in_axes=(0, 0, 0, 0, 0, None)))
+
+    def run(batch: CellBatch):
+        st, ds = init_batch(batch.keys, batch.p_base, batch.hparams,
+                            batch.data, batch.shared)
+        return scan_batch(st, ds, batch.keys["data"], batch.p_base,
+                          batch.hparams, batch.shared)
+
+    run.init_batch = init_batch
+    run.scan_batch = scan_batch
+    return run
+
+
+def make_vmap_run_rounds(loss_fn: Callable, optimizer, algorithm: Algorithm,
+                         fed_cfg: FederationConfig, source, *,
+                         link_factory: Callable,
+                         init_params: Callable,
+                         num_rounds: int,
+                         eval_every: int = 0,
+                         eval_fn: Optional[Callable] = None,
+                         metric_keys=DEFAULT_METRIC_KEYS):
+    """The PR-2 seed-axis runner: S seeds of one cell as one program, with the
+    optimizer and the dataset (a regular constant-capturing ``DataSource``)
+    baked at build time.
+
+    Now a thin wrapper over ``make_batched_run_rounds`` running a single
+    hyperparameter point: hparams/data/shared are empty pytrees, so the traced
+    program is the historical one and per-seed trajectories remain bit-for-bit
+    equal to the sequential path (``tests/test_sweep.py``).
+
+    Returns ``run(keys, p_base) -> (states, out)`` where ``keys`` is a
+    ``stack_seed_keys`` bundle and ``p_base`` is ``[S, m]``.
+    """
+    core = make_batched_run_rounds(
+        loss_fn, algorithm, fed_cfg,
+        optimizer_factory=lambda hp: optimizer,
+        link_factory=lambda p, hp: link_factory(p),
+        source_factory=lambda shared: DataSource(
+            lambda key, data: source.init(key), source.sample, source.name),
+        init_params=init_params,
+        num_rounds=num_rounds,
+        eval_every=eval_every,
+        eval_fn=(lambda params, shared: eval_fn(params))
+                if eval_fn is not None else None,
+        metric_keys=metric_keys)
 
     def run(keys, p_base):
-        st, ds = init_batch(keys, p_base)
-        return scan_batch(st, ds, keys["data"], p_base)
+        return core(CellBatch(keys=keys, p_base=p_base, hparams={}, data=(),
+                              shared=()))
 
+    run.init_batch = core.init_batch
+    run.scan_batch = core.scan_batch
     return run
 
 
@@ -160,6 +267,10 @@ def eval_rounds(num_rounds: int, eval_every: int):
     return out
 
 
+def _float_list(text: str):
+    return tuple(float(v) for v in text.split(",")) if text else ()
+
+
 def main(argv=None) -> None:
     import argparse
 
@@ -168,8 +279,11 @@ def main(argv=None) -> None:
     from repro.experiments.results import ResultsStore
 
     ap = argparse.ArgumentParser(
-        description="Run a (algorithm x scheme x seed) sweep on the vmapped "
-                    "engine and append results to a JSONL/npz store.")
+        description="Run a (algorithm x scheme x hyperparameter x seed) sweep "
+                    "on the batched engine and append results to a JSONL/npz "
+                    "store. Each --lrs/--gammas/--alphas/--sigma0s/--deltas "
+                    "axis is swept inside ONE compiled program per "
+                    "(algorithm, scheme).")
     ap.add_argument("--algos", default="fedpbc,fedavg",
                     help=f"comma list from {','.join(ALGOS)}")
     ap.add_argument("--schemes", default="bernoulli_ti",
@@ -179,10 +293,17 @@ def main(argv=None) -> None:
     ap.add_argument("--eval-every", type=int, default=25)
     ap.add_argument("--clients", type=int, default=100)
     ap.add_argument("--local-steps", type=int, default=5)
+    ap.add_argument("--lr", type=float, default=0.1)
     ap.add_argument("--alpha", type=float, default=0.1)
     ap.add_argument("--gamma", type=float, default=0.5)
     ap.add_argument("--delta", type=float, default=0.02)
     ap.add_argument("--sigma0", type=float, default=10.0)
+    ap.add_argument("--lrs", default="", help="comma list; hyperparameter "
+                    "axis overriding --lr (traced, no recompile)")
+    ap.add_argument("--gammas", default="", help="axis overriding --gamma")
+    ap.add_argument("--alphas", default="", help="axis overriding --alpha")
+    ap.add_argument("--sigma0s", default="", help="axis overriding --sigma0")
+    ap.add_argument("--deltas", default="", help="axis overriding --delta")
     ap.add_argument("--out", default="benchmarks/out/sweeps",
                     help="results-store directory (JSONL + npz)")
     ap.add_argument("--suite", default="cli", help="suite tag on the records")
@@ -194,14 +315,18 @@ def main(argv=None) -> None:
         seeds=tuple(int(s) for s in args.seeds.split(",")),
         rounds=args.rounds, eval_every=args.eval_every,
         num_clients=args.clients, local_steps=args.local_steps,
-        alpha=args.alpha, gamma=args.gamma, delta=args.delta,
-        sigma0=args.sigma0)
+        lr=args.lr, alpha=args.alpha, gamma=args.gamma, delta=args.delta,
+        sigma0=args.sigma0,
+        lrs=_float_list(args.lrs), gammas=_float_list(args.gammas),
+        alphas=_float_list(args.alphas), sigma0s=_float_list(args.sigma0s),
+        deltas=_float_list(args.deltas))
     store = ResultsStore(args.out)
-    print("sweep,scheme,algo,seeds,test_acc_mean,test_acc_ci95,train_acc_mean",
-          flush=True)
+    print("sweep,scheme,algo,hparams,seeds,test_acc_mean,test_acc_ci95,"
+          "train_acc_mean", flush=True)
     for cell in run_sweep(spec, store=store, suite=args.suite):
         s = cell.summary()
-        print(f"sweep,{cell.scheme},{cell.algo},{len(cell.seeds)},"
+        hp = ";".join(f"{k}={v:g}" for k, v in sorted(cell.hparams.items()))
+        print(f"sweep,{cell.scheme},{cell.algo},{hp},{len(cell.seeds)},"
               f"{s['test_acc']['mean']:.4f},{s['test_acc']['ci95']:.4f},"
               f"{s['train_acc']['mean']:.4f}", flush=True)
     print(f"# results appended to {store.path}", flush=True)

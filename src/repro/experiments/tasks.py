@@ -11,6 +11,16 @@ accuracy evals (they return traced scalars, NOT floats, so they compose with
 ``vmap``), and the shared device-resident ``DataSource``. The dataset itself
 is shared across seeds — per-seed randomness enters through PRNG keys and the
 per-seed Eq.-9 ``p_base`` draw, matching the paper's seed protocol.
+
+``ClassificationTask`` captures the dataset and its Dirichlet(alpha)
+partition as jit constants, which is fine for a fixed alpha but forces a full
+task + compile rebuild per swept alpha. ``TracedClassificationTask``
+(``make_traced_classification_task``) is the traced-everything variant the
+batched sweep core runs on: the dataset arrays enter the compiled program as
+the ``shared`` traced input, the partition travels per hyperparameter point
+in ``ds_state`` (``partition(alpha)`` is host-side numpy, identical to the
+constant task's split for equal alpha), and the evals take ``(params,
+shared)`` so they stay traced too.
 """
 from __future__ import annotations
 
@@ -25,6 +35,7 @@ from repro.data import (
     classification_source,
     dirichlet_partition,
     make_classification_data,
+    traced_classification_source,
 )
 from repro.data.sources import DataSource
 
@@ -98,6 +109,73 @@ def make_classification_task(*, data_seed=0, num_clients=100, dim=32,
         meta={"dataset": "gaussian10", "data_seed": data_seed, "dim": dim,
               "classes": classes, "hidden": hidden, "n_train": n_train,
               "n_test": int(len(x_all) - n_train), "alpha": alpha,
+              "num_clients": num_clients, "per_client": per_client,
+              "local_steps": local_steps, "batch_size": batch_size},
+    )
+
+
+@dataclass(frozen=True)
+class TracedClassificationTask:
+    """Alpha-free task bundle for the batched sweep core.
+
+    ``shared`` is the dataset pytree the runner threads through its compiled
+    programs as an *unbatched traced input* (``{"x", "y", "xt", "yt"}``);
+    ``partition(alpha)`` produces one hyperparameter point's per-client index
+    table (host-side numpy, cache the result per alpha); ``source_factory``
+    and the evals are meant to be called inside the trace on the traced
+    ``shared``.
+    """
+
+    loss_fn: Callable[..., Any]
+    init_params: Callable[..., Any]      # (key) -> params, vmap-able
+    source_factory: Callable[..., DataSource]  # (shared) -> traced DataSource
+    eval_test: Callable[..., Any]        # (params, shared) -> traced scalar
+    eval_train: Callable[..., Any]       # (params, shared) -> traced scalar
+    partition: Callable[[float], np.ndarray]   # (alpha) -> idx [m, per_client]
+    shared: Dict[str, Any]
+    meta: Dict[str, Any] = field(default_factory=dict)
+
+
+def make_traced_classification_task(*, data_seed=0, num_clients=100, dim=32,
+                                    classes=10, hidden=64, n_per_class=600,
+                                    sep=3.0, n_train=5000, per_client=64,
+                                    local_steps=5,
+                                    batch_size=32) -> TracedClassificationTask:
+    """Traced-everything variant of ``make_classification_task``.
+
+    No ``alpha`` argument: the partition is a per-hyperparameter-point input
+    (``partition(alpha)``), drawn from a fresh ``default_rng(data_seed)`` so
+    it is bit-identical to the constant task's split at the same alpha.
+    """
+    x_all, y_all = make_classification_data(data_seed, dim=dim,
+                                            num_classes=classes,
+                                            n_per_class=n_per_class, sep=sep)
+    x, y = x_all[:n_train], y_all[:n_train]
+    xt, yt = x_all[n_train:], y_all[n_train:]
+    shared = {"x": jnp.asarray(x), "y": jnp.asarray(y),
+              "xt": jnp.asarray(xt), "yt": jnp.asarray(yt)}
+
+    def partition(alpha: float) -> np.ndarray:
+        rng = np.random.default_rng(data_seed)
+        idx, _ = dirichlet_partition(rng, y, num_clients, alpha=alpha,
+                                     per_client=per_client)
+        return idx
+
+    def init_params(key):
+        return mlp_init(key, dim=dim, classes=classes, hidden=hidden)
+
+    return TracedClassificationTask(
+        loss_fn=mlp_loss,
+        init_params=init_params,
+        source_factory=lambda sh: traced_classification_source(
+            sh, local_steps=local_steps, batch_size=batch_size),
+        eval_test=lambda params, sh: mlp_accuracy(params, sh["xt"], sh["yt"]),
+        eval_train=lambda params, sh: mlp_accuracy(params, sh["x"], sh["y"]),
+        partition=partition,
+        shared=shared,
+        meta={"dataset": "gaussian10", "data_seed": data_seed, "dim": dim,
+              "classes": classes, "hidden": hidden, "n_train": n_train,
+              "n_test": int(len(x_all) - n_train),
               "num_clients": num_clients, "per_client": per_client,
               "local_steps": local_steps, "batch_size": batch_size},
     )

@@ -1,15 +1,23 @@
 """Learning-rate schedules. ``paper_decay`` is the paper's Appendix-B schedule
-eta_t = eta_0 / sqrt(t/10 + 1)."""
+eta_t = eta_0 / sqrt(t/10 + 1).
+
+``eta0`` may be a python float *or a traced scalar*: the sweep engine builds
+its optimizer inside the compiled program from a traced per-point base LR
+(``repro.experiments.sweep.make_batched_run_rounds``), so an LR ablation is
+served by one compile. Both schedules are pure arithmetic in ``eta0``, which
+is what makes the traced form bit-for-bit identical to the baked-constant
+form (asserted in ``tests/test_traced_axes.py``).
+"""
 from __future__ import annotations
 
 import jax.numpy as jnp
 
 
-def constant(eta0: float):
+def constant(eta0):
     return lambda step: jnp.asarray(eta0, jnp.float32)
 
 
-def paper_decay(eta0: float, div: float = 10.0):
+def paper_decay(eta0, div: float = 10.0):
     def sched(step):
         t = jnp.asarray(step, jnp.float32)
         return eta0 / jnp.sqrt(t / div + 1.0)

@@ -1,0 +1,257 @@
+"""Cross-session results tooling: store merge (dedup by cell key, git-SHA
+report) and figure-curve CSV export — both must work from stored artifacts
+alone, re-running nothing."""
+import numpy as np
+
+from repro.experiments.plots import export_curves, main as plots_main
+from repro.experiments.results import (
+    ResultsStore,
+    cell_key,
+    group_by_sha,
+    main as results_main,
+)
+
+
+def _rec(suite, algo, seeds, sha, acc):
+    return ({"suite": suite, "algo": algo, "scheme": "bernoulli_ti",
+             "seeds": seeds, "rounds": 4, "eval_every": 2,
+             "hparams": {"lr": 0.1, "alpha": 0.1}, "eval_rounds": [2, 4],
+             "git_sha": sha},
+            {"test_acc": np.asarray(acc),
+             "loss": np.linspace(1.0, 0.5, len(seeds) * 4).reshape(
+                 len(seeds), 4)})
+
+
+def test_cell_key_identity():
+    rec_a, _ = _rec("t1", "fedpbc", [0, 1], "aaa", [[0.1, 0.2], [0.2, 0.3]])
+    rec_b, _ = _rec("t1", "fedpbc", [0, 1], "bbb", [[0.5, 0.6], [0.6, 0.7]])
+    assert cell_key(rec_a) == cell_key(rec_b)       # sha not part of identity
+    rec_c, _ = _rec("t1", "fedpbc", [2], "aaa", [[0.1, 0.2]])
+    assert cell_key(rec_a) != cell_key(rec_c)       # seeds are
+    rec_d = dict(rec_a, hparams={"lr": 0.2, "alpha": 0.1})
+    assert cell_key(rec_a) != cell_key(rec_d)       # hparam coords are
+    # protocol fields in the recorded spec are part of the identity: an m=32
+    # run must never deduplicate against an m=100 run of the same suite
+    rec_e = dict(rec_a, spec={"num_clients": 32})
+    rec_f = dict(rec_a, spec={"num_clients": 100})
+    assert cell_key(rec_e) != cell_key(rec_f)
+    # sweep-grid bookkeeping in the spec (which other cells ran alongside)
+    # does NOT split identity
+    rec_g = dict(rec_a, spec={"num_clients": 32,
+                              "algorithms": ["fedpbc", "fedavg"]})
+    assert cell_key(rec_e) == cell_key(rec_g)
+    # legacy pre-hparams records: the swept value only lives in the spec's
+    # scalar knobs, which must still separate ablation rows
+    legacy_a = {k: v for k, v in rec_a.items() if k != "hparams"}
+    old1 = dict(legacy_a, spec={"delta": 0.001})
+    old2 = dict(legacy_a, spec={"delta": 0.1})
+    assert cell_key(old1) != cell_key(old2)
+
+
+def test_merge_dedupes_by_cell_key_later_store_wins(tmp_path):
+    a = ResultsStore(str(tmp_path / "a"))
+    rec, arrays = _rec("t1", "fedpbc", [0, 1], "aaa",
+                       [[0.1, 0.2], [0.2, 0.3]])
+    a.append(rec, arrays=arrays)
+    rec2, arrays2 = _rec("t1", "fedavg", [0, 1], "aaa",
+                         [[0.3, 0.4], [0.4, 0.5]])
+    a.append(rec2, arrays=arrays2)
+
+    b = ResultsStore(str(tmp_path / "b"))
+    rerun, rerun_arrays = _rec("t1", "fedpbc", [0, 1], "bbb",
+                               [[0.8, 0.9], [0.7, 0.8]])
+    b.append(rerun, arrays=rerun_arrays)
+
+    merged = ResultsStore.merge(str(tmp_path / "m"), str(tmp_path / "a"), b)
+    rows = merged.records()
+    assert len(rows) == 2
+    assert [r["record_id"] for r in rows] == [0, 1]
+    by_algo = {r["algo"]: r for r in rows}
+    # the fedpbc cell appears in both stores: the later store's row survives,
+    # with its arrays and its recorded SHA
+    assert by_algo["fedpbc"]["git_sha"] == "bbb"
+    np.testing.assert_array_equal(
+        merged.load_arrays(by_algo["fedpbc"])["test_acc"],
+        np.asarray([[0.8, 0.9], [0.7, 0.8]]))
+    assert by_algo["fedavg"]["git_sha"] == "aaa"
+    assert {r["source_record_id"] for r in rows} == {0, 1}
+
+    groups = group_by_sha(rows)
+    assert {sha: len(g) for sha, g in groups.items()} == {"aaa": 1, "bbb": 1}
+
+
+def test_merge_survives_missing_npz(tmp_path, capsys):
+    import os
+    a = ResultsStore(str(tmp_path / "a"))
+    rec = a.append(*_rec("t1", "fedpbc", [0], "aaa", [[0.1, 0.2]]))
+    a.append(*_rec("t1", "fedavg", [0], "aaa", [[0.2, 0.3]]))
+    os.remove(os.path.join(a.root, rec["arrays"]))   # partially copied store
+
+    merged = ResultsStore.merge(str(tmp_path / "m"), a)
+    rows = merged.records()
+    assert len(rows) == 2                            # metadata survives
+    by_algo = {r["algo"]: r for r in rows}
+    assert "arrays" not in by_algo["fedpbc"]         # payload was missing
+    assert merged.load_arrays(by_algo["fedavg"])["test_acc"].shape == (1, 2)
+    assert "skipping arrays" in capsys.readouterr().err
+
+
+def test_merge_refuses_nonempty_destination(tmp_path):
+    """Re-running merge with the same --out must not silently duplicate
+    rows; a non-empty destination is refused (re-merge via a fresh dir)."""
+    a = ResultsStore(str(tmp_path / "a"))
+    a.append(*_rec("t1", "fedpbc", [0], "aaa", [[0.1, 0.2]]))
+    ResultsStore.merge(str(tmp_path / "m"), a)
+    import pytest
+    with pytest.raises(ValueError, match="already has records"):
+        ResultsStore.merge(str(tmp_path / "m"), a)
+    # re-merge path: old destination as a source into a fresh dir
+    merged2 = ResultsStore.merge(str(tmp_path / "m2"), str(tmp_path / "m"), a)
+    assert len(merged2.records()) == 1
+    # a typo'd source path fails loudly instead of contributing zero rows
+    with pytest.raises(FileNotFoundError, match="no results.jsonl"):
+        ResultsStore.merge(str(tmp_path / "m3"), str(tmp_path / "nope"), a)
+
+
+def test_merge_cli_reports_by_sha(tmp_path, capsys):
+    a = ResultsStore(str(tmp_path / "a"))
+    a.append(*_rec("t1", "fedpbc", [0], "aaa", [[0.1, 0.2]]))
+    b = ResultsStore(str(tmp_path / "b"))
+    b.append(*_rec("t2", "fedavg", [0], "bbb", [[0.2, 0.3]]))
+    results_main(["merge", str(tmp_path / "a"), str(tmp_path / "b"),
+                  "--out", str(tmp_path / "m")])
+    out = capsys.readouterr().out
+    assert "merged 2 stores" in out and "(2 rows)" in out
+    assert "git aaa: 1 rows (t1=1)" in out
+    assert "git bbb: 1 rows (t2=1)" in out
+
+
+def test_export_curves_pools_seed_batches(tmp_path):
+    store = ResultsStore(str(tmp_path / "s"))
+    store.append(*_rec("t1", "fedpbc", [0, 1], "aaa",
+                       [[0.1, 0.2], [0.2, 0.3]]))
+    # a second session's batch of DIFFERENT seeds for the same curve
+    rec, arrays = _rec("t1", "fedpbc", [2, 3], "aaa",
+                       [[0.3, 0.4], [0.4, 0.5]])
+    store.append(rec, arrays=arrays)
+
+    written = export_curves(store, str(tmp_path / "curves"), suite="t1")
+    acc = [p for p in written if p.endswith("_acc.csv")]
+    loss = [p for p in written if p.endswith("_loss.csv")]
+    assert len(acc) == 1 and len(loss) == 1
+
+    with open(acc[0]) as f:
+        lines = [l.strip() for l in f]
+    assert lines[0] == "round,mean,std,ci95,n_seeds"
+    assert len(lines) == 3                       # eval_rounds [2, 4]
+    r2 = lines[1].split(",")
+    assert r2[0] == "2" and r2[4] == "4"         # pooled over 4 seeds
+    np.testing.assert_allclose(float(r2[1]), np.mean([0.1, 0.2, 0.3, 0.4]))
+    with open(loss[0]) as f:
+        assert len(f.readlines()) == 5           # header + K=4 rounds
+
+
+def test_export_curves_reruns_supersede_not_double_count(tmp_path):
+    """The store is append-only: a re-run of the SAME cell (same seeds) must
+    replace, not pool — pooling duplicate seeds would shrink the CI."""
+    store = ResultsStore(str(tmp_path / "s"))
+    store.append(*_rec("t1", "fedpbc", [0, 1], "aaa",
+                       [[0.1, 0.2], [0.2, 0.3]]))
+    store.append(*_rec("t1", "fedpbc", [0, 1], "bbb",   # re-run, new code
+                       [[0.5, 0.6], [0.6, 0.7]]))
+    written = export_curves(store, str(tmp_path / "curves"))
+    acc = [p for p in written if p.endswith("_acc.csv")]
+    assert len(acc) == 1
+    with open(acc[0]) as f:
+        lines = [l.strip() for l in f]
+    r2 = lines[1].split(",")
+    assert r2[4] == "2"                              # still 2 seeds, not 4
+    np.testing.assert_allclose(float(r2[1]), np.mean([0.5, 0.6]))  # latest
+
+
+def test_interleaved_handles_keep_record_ids_unique(tmp_path):
+    """Two live handles on one root must never hand out the same record_id
+    (the per-handle count cache is invalidated by file growth)."""
+    a = ResultsStore(str(tmp_path / "s"))
+    b = ResultsStore(str(tmp_path / "s"))
+    ids = [a.append({"suite": "t"})["record_id"],
+           b.append({"suite": "t"})["record_id"],
+           b.append({"suite": "t"})["record_id"],
+           a.append({"suite": "t"})["record_id"]]
+    assert ids == [0, 1, 2, 3]
+
+
+def test_export_curves_overlapping_seed_batches_dedup(tmp_path):
+    """Seed batches that OVERLAP (e.g. [0,1] then a superset re-run [0,1,2])
+    must not double-count shared seeds; the later record's rows win."""
+    store = ResultsStore(str(tmp_path / "s"))
+    store.append(*_rec("t1", "fedpbc", [0, 1], "aaa",
+                       [[0.1, 0.2], [0.2, 0.3]]))
+    rec, arrays = _rec("t1", "fedpbc", [0, 1, 2], "bbb",
+                       [[0.5, 0.6], [0.6, 0.7], [0.7, 0.8]])
+    arrays["loss"] = np.linspace(1.0, 0.5, 12).reshape(3, 4)
+    store.append(rec, arrays=arrays)
+    written = export_curves(store, str(tmp_path / "curves"))
+    acc = [p for p in written if p.endswith("_acc.csv")][0]
+    with open(acc) as f:
+        lines = [l.strip() for l in f]
+    r2 = lines[1].split(",")
+    assert r2[4] == "3"                              # 3 unique seeds, not 5
+    np.testing.assert_allclose(float(r2[1]), np.mean([0.5, 0.6, 0.7]))
+
+
+def test_export_curves_skips_missing_npz(tmp_path, capsys):
+    import os
+    store = ResultsStore(str(tmp_path / "s"))
+    rec = store.append(*_rec("t1", "fedpbc", [0], "aaa", [[0.1, 0.2]]))
+    store.append(*_rec("t1", "fedavg", [0], "aaa", [[0.2, 0.3]]))
+    os.remove(os.path.join(store.root, rec["arrays"]))
+    written = export_curves(store, str(tmp_path / "curves"))
+    assert len(written) == 2                         # fedavg curve survives
+    assert all("fedavg" in p for p in written)
+    assert "missing arrays" in capsys.readouterr().err
+
+
+def test_export_curves_arrayless_rerun_supersedes_stale_arrays(tmp_path,
+                                                               capsys):
+    """A later record WITHOUT an array payload (merge keeps metadata when an
+    npz was lost) must supersede an older same-cell record — the stale old
+    arrays must not be exported as the cell's current curve."""
+    store = ResultsStore(str(tmp_path / "s"))
+    store.append(*_rec("t1", "fedpbc", [0], "aaa", [[0.1, 0.2]]))
+    rerun, _ = _rec("t1", "fedpbc", [0], "bbb", [[0.9, 0.9]])
+    store.append(rerun)                              # no arrays payload
+    written = export_curves(store, str(tmp_path / "curves"))
+    assert written == []                             # nothing stale exported
+    assert "no array payload" in capsys.readouterr().err
+
+
+def test_export_curves_protocol_variants_get_distinct_files(tmp_path):
+    """Curves differing only in protocol fields (e.g. num_clients) must not
+    overwrite each other's CSVs."""
+    store = ResultsStore(str(tmp_path / "s"))
+    rec, arrays = _rec("t1", "fedpbc", [0], "aaa", [[0.1, 0.2]])
+    store.append(dict(rec, spec={"num_clients": 32}), arrays=arrays)
+    store.append(dict(rec, spec={"num_clients": 100}), arrays=arrays)
+    written = export_curves(store, str(tmp_path / "curves"))
+    assert len(written) == len(set(written)) == 4    # 2 curves x (acc, loss)
+
+
+def test_export_curves_close_floats_get_distinct_files(tmp_path):
+    """hparams differing only beyond %g display precision (logspace-style
+    lrs) must still map to distinct CSVs (exact values live in the digest)."""
+    store = ResultsStore(str(tmp_path / "s"))
+    rec, arrays = _rec("t1", "fedpbc", [0], "aaa", [[0.1, 0.2]])
+    store.append(dict(rec, hparams={"lr": 0.012345678}), arrays=arrays)
+    store.append(dict(rec, hparams={"lr": 0.012345681}), arrays=arrays)
+    written = export_curves(store, str(tmp_path / "curves"))
+    assert len(written) == len(set(written)) == 4
+
+
+def test_plots_cli(tmp_path, capsys):
+    store = ResultsStore(str(tmp_path / "s"))
+    store.append(*_rec("t1", "fedpbc", [0], "aaa", [[0.1, 0.2]]))
+    plots_main(["--store", str(tmp_path / "s"),
+                "--out", str(tmp_path / "curves")])
+    out = capsys.readouterr().out
+    assert "2 curve files" in out

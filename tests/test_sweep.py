@@ -219,8 +219,10 @@ def test_run_sweep_grid_and_compile_cache(tmp_path):
 
 def test_sweep_throughput_bench_records_speedup():
     """The acceptance benchmark (m=32, S=8 on CPU) must record >= 2x
-    cells/sec for the vmapped engine over the sequential run_training loop.
-    Regenerate with ``python -m benchmarks.run --only sweep``."""
+    cells/sec for the vmapped engine over the (same-protocol) sequential
+    loop, and >= 2x for the traced hyperparameter ablation over the
+    per-value-recompile path with a single compile serving every swept
+    value. Regenerate with ``python -m benchmarks.run --only sweep``."""
     path = os.path.join(os.path.dirname(__file__), "..", "benchmarks", "out",
                         "sweep_throughput.json")
     if not os.path.exists(path):
@@ -229,3 +231,13 @@ def test_sweep_throughput_bench_records_speedup():
         bench = json.load(f)
     assert bench["m"] == 32 and bench["n_seeds"] == 8
     assert bench["speedup"] >= 2.0, bench
+    # the two arms run one protocol now: trajectories must agree
+    assert bench["trajectory_max_abs_diff"] <= 1e-5, bench
+    ab = bench["hparam_ablation"]
+    assert ab["speedup"] >= 2.0, ab
+    assert ab["trajectory_max_abs_diff"] <= 1e-5, ab
+    if ab["traced_compile_entries"] >= 0:
+        # one batched init + one batched scan serve the whole ablation;
+        # the baked path compiles a pair per grid point
+        assert ab["traced_compile_entries"] == 2, ab
+        assert ab["per_value_compile_entries"] == 2 * ab["n_points"], ab
