@@ -7,8 +7,10 @@ all the values: every (value x seed) trajectory of an ablation executes as
 one compiled program per algorithm. All four knobs are traced inputs on the
 batched sweep core — gamma through the link factory's traced scalar,
 delta/sigma0 through the traced per-trajectory ``p_base``, alpha through both
-``p_base`` and the traced partition table — so the figure compiles exactly
-``len(algos)`` programs total, where the per-value path used to pay a fresh
+``p_base`` and the traced partition table — so the figure is served by ONE
+cached runner per algorithm: no swept *value* ever compiles. Only the two
+distinct flattened batch *shapes* (the 2-value and 3-value ablations) add an
+executable per jitted stage, where the per-value path used to pay a fresh
 task and/or compile per alpha and gamma value."""
 from __future__ import annotations
 

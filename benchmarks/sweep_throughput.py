@@ -15,7 +15,7 @@ baselines, on two axes.
    - ``vmapped``: ``repro.experiments.grid.run_cell`` — all S seeds as ONE
      compiled program. Reported cold (includes the compile) and warm.
 
-2. **Hyperparameter axis** (this refactor's acceptance workload): an
+2. **Hyperparameter axis** (the PR-3 acceptance workload): an
    lr x alpha ablation grid x S seeds of the same cell.
 
    - ``per-value-recompile``: one PR-2-style seed-axis runner per point with
@@ -26,6 +26,18 @@ baselines, on two axes.
      ONE compiled program, lr as a traced scalar and the alpha partition as a
      traced index table. Compile counts for both arms come from the runners'
      jit cache sizes.
+
+3. **Device axis** (this refactor's acceptance workload): the SAME batched
+   cell program executed single-device vs sharded over a ``("batch",)`` mesh
+   of every visible device (``repro.experiments.shard``), warm timings both
+   ways plus the max per-trajectory deviation (must be 0.0 — sharding the
+   batch axis is a placement change, not a numeric one). Runnable on CPU via
+   ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` — note forced host
+   devices SHARE the physical cores, so the sharded cells/sec measures
+   partitioning overhead there, not real scaling; on real multi-device
+   backends it measures scaling. With a single visible device the entry
+   records ``n_devices: 1`` and the rerun recipe. The seed/hparam arms above
+   pin ``mesh=None`` so their numbers stay comparable across environments.
 
 The hyperparameter comparison is steady-state: a per-value-recompile path
 recompiles for EVERY new swept value, forever, while the traced path's one
@@ -61,7 +73,15 @@ from repro.experiments import (
     seed_keys,
     stack_seed_keys,
 )
-from repro.experiments.grid import get_task, point_base_probs, seed_base_probs
+from repro.experiments.grid import (
+    _runner_for,
+    get_task,
+    get_traced_task,
+    make_cell_batch,
+    point_base_probs,
+    seed_base_probs,
+)
+from repro.experiments.shard import pad_batch, resolve_batch_mesh, shard_batch
 from repro.optim import paper_decay, sgd
 
 
@@ -132,6 +152,67 @@ def _per_value_recompile_arm(spec: SweepSpec, points):
     return np.asarray(evals), cache_entries
 
 
+def _device_scaling_arm(spec: SweepSpec, scaling_lrs=(0.03, 0.05, 0.1, 0.2)):
+    """Warm single-device vs sharded execution of one batched cell (B =
+    len(scaling_lrs) x S trajectories, padded to the device count). Returns
+    the ``device_scaling`` BENCH sub-dict."""
+    n_dev = len(jax.devices())
+    spec = dataclasses.replace(spec, lrs=tuple(scaling_lrs))
+    task = get_traced_task(spec)
+    fed = spec.cell_config("fedpbc", "bernoulli_ti")
+    runner = _runner_for(spec, fed, task, ("loss", "num_active"))
+    batch = make_cell_batch(spec, fed, task)
+    B = batch.batch_size
+
+    def timed(fn):
+        jax.block_until_ready(fn())           # compile + warm
+        t0 = time.perf_counter()
+        out = fn()
+        jax.block_until_ready(out)
+        return time.perf_counter() - t0, out
+
+    single_s, ref = timed(lambda: runner(batch))
+    entry = {
+        "n_devices": n_dev,
+        "batch": B,
+        "rounds": spec.rounds,
+        "padded_batch": B + (-B) % n_dev,
+        "single_device_seconds": round(single_s, 4),
+        "single_device_cells_per_s": round(B / single_s, 4),
+    }
+    if n_dev < 2:
+        entry["note"] = ("single device visible; rerun under XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=8 (CPU) or "
+                         "on a multi-device backend for the sharded arm")
+        return entry
+
+    # commit the padded batch ONCE outside the timed region — the production
+    # path (grid._sharded_cell_batch) memoizes this transfer per sweep, so
+    # timing it per call would charge the sharded arm H2D cost the single-
+    # device arm (whose batch is already device-resident) never pays
+    mesh = resolve_batch_mesh()
+    padded, b_real = pad_batch(batch, mesh.devices.size)
+    sharded = shard_batch(padded, mesh)
+    sharded_s, sh = timed(lambda: runner(sharded))
+    if padded.batch_size != b_real:
+        sh = jax.tree.map(lambda x: x[:b_real], sh)
+    diff = max(
+        float(np.abs(np.asarray(a, np.float64)
+                     - np.asarray(b, np.float64)).max())
+        for a, b in zip(jax.tree.leaves(ref), jax.tree.leaves(sh)))
+    # a placement change must not change a single trajectory
+    if diff != 0.0:
+        raise RuntimeError(
+            f"sharded and single-device trajectories diverged: {diff}")
+    entry.update({
+        "sharded_seconds": round(sharded_s, 4),
+        "sharded_cells_per_s": round(B / sharded_s, 4),
+        "speedup": round(single_s / sharded_s, 2),
+        "trajectory_max_abs_diff": diff,
+    })
+    return entry
+
+
 def run(csv=True, *, rounds=100, m=32, n_seeds=8, seed0=0, out_path=None,
         ablation_lrs=(0.03, 0.05, 0.1, 0.2), ablation_alphas=(0.1, 1.0),
         ablation_seeds=4, ablation_rounds=None):
@@ -142,10 +223,10 @@ def run(csv=True, *, rounds=100, m=32, n_seeds=8, seed0=0, out_path=None,
 
     # --- seed axis: vmapped engine, cold (includes compile) then warm
     t0 = time.perf_counter()
-    cell = run_cell(spec, "fedpbc", "bernoulli_ti")
+    cell = run_cell(spec, "fedpbc", "bernoulli_ti", mesh=None)
     vmap_cold_s = time.perf_counter() - t0
     t0 = time.perf_counter()
-    cell = run_cell(spec, "fedpbc", "bernoulli_ti")
+    cell = run_cell(spec, "fedpbc", "bernoulli_ti", mesh=None)
     vmap_warm_s = time.perf_counter() - t0
 
     # --- seed axis: sequential baseline on the SAME protocol
@@ -172,9 +253,9 @@ def run(csv=True, *, rounds=100, m=32, n_seeds=8, seed0=0, out_path=None,
     n_cells = len(points) * ablation_seeds
 
     t0 = time.perf_counter()
-    ab_cells = run_cell_batch(ab_spec, "fedpbc", "bernoulli_ti")
+    ab_cells = run_cell_batch(ab_spec, "fedpbc", "bernoulli_ti",
+                              mesh=None)
     traced_cold_s = time.perf_counter() - t0
-    from repro.experiments.grid import _runner_for, get_traced_task
     traced_runner = _runner_for(
         ab_spec, ab_spec.cell_config("fedpbc", "bernoulli_ti"),
         get_traced_task(ab_spec), ("loss", "num_active"))
@@ -187,7 +268,7 @@ def run(csv=True, *, rounds=100, m=32, n_seeds=8, seed0=0, out_path=None,
         ab_spec, lrs=tuple(lr * 1.3 for lr in ablation_lrs),
         alphas=tuple(a * 3.0 for a in ablation_alphas))
     t0 = time.perf_counter()
-    run_cell_batch(new_spec, "fedpbc", "bernoulli_ti")
+    run_cell_batch(new_spec, "fedpbc", "bernoulli_ti", mesh=None)
     traced_new_values_s = time.perf_counter() - t0
     traced_compiles_after = _cache_entries(traced_runner)
     if traced_compiles_after != traced_compiles:
@@ -201,6 +282,12 @@ def run(csv=True, *, rounds=100, m=32, n_seeds=8, seed0=0, out_path=None,
     if ab_diff > 1e-5:
         raise RuntimeError(
             f"traced-lr and baked-lr trajectories diverged: {ab_diff}")
+
+    # --- device axis: the same batched program, single-device vs sharded
+    device_scaling = _device_scaling_arm(
+        dataclasses.replace(spec, seeds=ab_seeds, rounds=ab_rounds,
+                            eval_every=min(25, ab_rounds)),
+        scaling_lrs=tuple(ablation_lrs))
 
     seq_cps = n_seeds / seq_s
     vmap_cps = n_seeds / vmap_warm_s
@@ -245,6 +332,7 @@ def run(csv=True, *, rounds=100, m=32, n_seeds=8, seed0=0, out_path=None,
             "speedup": round(baseline_s / traced_new_values_s, 2),
             "speedup_first_run": round(baseline_s / traced_cold_s, 2),
         },
+        "device_scaling": device_scaling,
         "backend": jax.default_backend(),
     }
     print("BENCH " + json.dumps(result), flush=True)

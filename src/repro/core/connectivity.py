@@ -92,6 +92,19 @@ def markov_process(p_base, cfg: FederationConfig, *, gamma=None,
 
     Homogeneous: transitions from time-invariant p_i.
     Non-homogeneous: transitions re-derived from time-varying p_i^t.
+
+    Time-index convention (audited against Eq. 9 / Table 3): the mask
+    returned for round ``t`` is the chain state AFTER applying the transition
+    derived from ``p_of_t(t)`` — i.e. ``sample`` advances ``X_{t-1} -> X_t``
+    with rates ``(q_t, q*_t) = transitions(p_i^t)`` and returns ``X_t``; the
+    ``init`` draw ``X_{-1} ~ Bernoulli(p_base)`` is the pre-round seed state
+    and is never itself used as a mask. The ensemble ON-fraction therefore
+    follows ``mu_t = (1 - q_t - q*_t) mu_{t-1} + q*_t``: in the homogeneous
+    chain ``mu_t = p_i`` exactly for every t (Table 3 rates have stationary
+    distribution ``p_i`` and the init puts the chain there), while the
+    non-homogeneous chain tracks ``p_i^t`` with the chain's mixing lag of
+    ``O(|dp/dt| / (q + q*))`` — a real channel memory, not an indexing bug
+    (``tests/test_connectivity.py`` checks both against this recursion).
     """
     tv = cfg.time_varying
     gamma, period = _dynamics(cfg, gamma, period)

@@ -6,6 +6,9 @@
   seed-axis wrapper; plus the sweep CLI.
 - ``grid``    — ``SweepSpec`` grids (with ``lrs``/``gammas``/``alphas``/
   ``sigma0s``/``deltas`` axes), the executor, structure-only compile caches.
+- ``shard``   — multi-device execution of the batched runner: the flattened
+  (point x seed) batch axis sharded over a ``("batch",)`` mesh, ``shared``
+  replicated, B padded to a device multiple (padding dropped on the host).
 - ``results`` — append-only JSONL/npz results store with mean/CI summaries,
   cross-store ``merge`` + CLI.
 - ``plots``   — figure-style curve CSV exports straight from a store.
@@ -22,6 +25,12 @@ from repro.experiments.grid import (
     run_sweep,
 )
 from repro.experiments.results import ResultsStore, git_sha, summarize
+from repro.experiments.shard import (
+    pad_batch,
+    resolve_batch_mesh,
+    run_sharded,
+    shard_batch,
+)
 from repro.experiments.sweep import (
     CellBatch,
     eval_rounds,
@@ -52,6 +61,10 @@ __all__ = [
     "ResultsStore",
     "git_sha",
     "summarize",
+    "pad_batch",
+    "resolve_batch_mesh",
+    "run_sharded",
+    "shard_batch",
     "CellBatch",
     "eval_rounds",
     "make_batched_run_rounds",

@@ -35,6 +35,12 @@ from repro.configs.base import FederationConfig
 from repro.core.algorithms import ALGORITHMS, make_algorithm
 from repro.core.connectivity import build_base_probs, make_link_process
 from repro.experiments.results import ResultsStore, summarize
+from repro.experiments.shard import (
+    AUTO,
+    pad_batch,
+    resolve_batch_mesh,
+    shard_batch,
+)
 from repro.experiments.sweep import (
     CellBatch,
     eval_rounds,
@@ -274,14 +280,22 @@ def seed_base_probs(spec: SweepSpec) -> jnp.ndarray:
 _BATCH_CACHE: Dict[tuple, tuple] = {}
 
 
+def _batch_key(spec: SweepSpec) -> tuple:
+    """Identity of a spec's fed-independent batch contents (dataset/model
+    shape, seed set, hyperparameter points). ONE definition shared by the
+    host-side ``_BATCH_CACHE`` and the device-side ``_SHARDED_BATCH_CACHE``
+    so the two can never desync on a future spec field."""
+    return (_task_key(spec), spec.seeds,
+            tuple(tuple(sorted(pt.items())) for pt in spec.hparam_points()))
+
+
 def _batch_parts(spec: SweepSpec) -> tuple:
     """The fed-independent pieces of a cell batch (keys, p_base, lr/gamma
     arrays, partition stack), memoized per (dataset, seeds, points): a full
     grid calls ``make_cell_batch`` once per (algorithm, scheme) cell, and
     only the ``period`` array can differ between those calls."""
     points = spec.hparam_points()
-    key = (_task_key(spec), spec.seeds,
-           tuple(tuple(sorted(pt.items())) for pt in points))
+    key = _batch_key(spec)
     if key not in _BATCH_CACHE:
         S = len(spec.seeds)
         seed_bundle = stack_seed_keys(spec.seeds)
@@ -308,6 +322,43 @@ def _batch_parts(spec: SweepSpec) -> tuple:
     return _BATCH_CACHE[key]
 
 
+_SHARDED_BATCH_CACHE: Dict[tuple, tuple] = {}
+
+
+def _sharded_cell_batch(spec: SweepSpec, fed: FederationConfig,
+                        task: TracedClassificationTask, mesh) -> tuple:
+    """``make_cell_batch`` padded to the mesh's device count and committed to
+    it, memoized like ``_batch_parts``: one device transfer of the heavy
+    fields (key/p_base/partition arrays, the replicated dataset — on real
+    multi-host backends, real H2D traffic) per (dataset, seeds, points,
+    mesh). ``fed`` is deliberately NOT in the cache key: only the tiny
+    ``[B_padded]`` ``period`` hparam vector depends on it, so it is rebuilt
+    and committed per call — cells (or whole sweeps) differing only in a
+    ``period`` override reuse the cached heavy arrays instead of pinning a
+    duplicate copy per value. Returns ``(sharded_batch, B_real)``; equal
+    meshes hash equal, so a fresh auto-resolved mesh over the same devices
+    still hits.
+
+    Unlike the host-side caches, this one holds DEVICE memory (a replicated
+    dataset copy per device), so it keeps only the most recent entry: a
+    sweep iterates cells of one (spec, mesh) and gets full reuse, while a
+    long-lived process hopping specs/meshes never accumulates committed
+    duplicates."""
+    key = _batch_key(spec) + (mesh,)
+    if key not in _SHARDED_BATCH_CACHE:
+        batch = make_cell_batch(spec, fed, task)
+        padded, b_real = pad_batch(batch, mesh.devices.size)
+        _SHARDED_BATCH_CACHE.clear()
+        _SHARDED_BATCH_CACHE[key] = (shard_batch(padded, mesh), b_real)
+    sharded, b_real = _SHARDED_BATCH_CACHE[key]
+    lr = sharded.hparams["lr"]
+    period = jax.device_put(
+        jnp.full(lr.shape, float(fed.period), jnp.float32), lr.sharding)
+    return CellBatch(keys=sharded.keys, p_base=sharded.p_base,
+                     hparams=dict(sharded.hparams, period=period),
+                     data=sharded.data, shared=sharded.shared), b_real
+
+
 def make_cell_batch(spec: SweepSpec, fed: FederationConfig,
                     task: TracedClassificationTask) -> CellBatch:
     """Flatten (hyperparameter point x seed) into one [B]-leading batch,
@@ -323,14 +374,35 @@ def make_cell_batch(spec: SweepSpec, fed: FederationConfig,
 
 
 def run_cell_batch(spec: SweepSpec, algo: str, scheme: str, *,
-                   metric_keys=("loss", "num_active")) -> List[CellResult]:
+                   metric_keys=("loss", "num_active"),
+                   mesh=AUTO, devices=None) -> List[CellResult]:
     """Run one (algo, scheme) cell: ALL hyperparameter points x seeds in one
-    batched program; returns one ``CellResult`` per point."""
+    batched program; returns one ``CellResult`` per point.
+
+    ``mesh``/``devices`` pick the execution placement (see
+    ``repro.experiments.shard.resolve_batch_mesh``): by default the batch
+    axis is sharded over a ``("batch",)`` mesh of all visible devices when
+    more than one is up (B padded to a device multiple, padding dropped on
+    the host), and runs on one device otherwise; ``mesh=None`` forces the
+    single-device path, an explicit ``devices`` list or ``Mesh`` pins the
+    placement. Per-trajectory results are identical either way, and both
+    paths share the same cached runner (the compiled executables differ, the
+    traced program does not).
+    """
     task = get_traced_task(spec)
     fed = spec.cell_config(algo, scheme)
     runner = _runner_for(spec, fed, task, metric_keys)
-    batch = make_cell_batch(spec, fed, task)
-    states, out = runner(batch)
+    batch_mesh = resolve_batch_mesh(mesh, devices)
+    if batch_mesh is not None:
+        # memoized pad + device_put (shard.run_sharded is the uncached
+        # one-shot equivalent); padding rows are sliced off right here, so
+        # nothing downstream ever sees them
+        sharded, b_real = _sharded_cell_batch(spec, fed, task, batch_mesh)
+        states, out = runner(sharded)
+        if sharded.batch_size != b_real:
+            states, out = jax.tree.map(lambda x: x[:b_real], (states, out))
+    else:
+        states, out = runner(make_cell_batch(spec, fed, task))
 
     points = spec.hparam_points()
     S = len(spec.seeds)
@@ -361,19 +433,22 @@ def run_cell_batch(spec: SweepSpec, algo: str, scheme: str, *,
 
 
 def run_cell(spec: SweepSpec, algo: str, scheme: str, *,
-             metric_keys=("loss", "num_active")) -> CellResult:
+             metric_keys=("loss", "num_active"),
+             mesh=AUTO, devices=None) -> CellResult:
     """Single-point convenience wrapper around ``run_cell_batch``."""
     n_points = len(spec.hparam_points())
     if n_points != 1:       # before compiling/running anything
         raise ValueError(
             f"spec has {n_points} hyperparameter points; use "
             f"run_cell_batch for swept axes")
-    return run_cell_batch(spec, algo, scheme, metric_keys=metric_keys)[0]
+    return run_cell_batch(spec, algo, scheme, metric_keys=metric_keys,
+                          mesh=mesh, devices=devices)[0]
 
 
 def run_sweep(spec: SweepSpec, *, store: Optional[ResultsStore] = None,
               suite: str = "sweep",
-              metric_keys=("loss", "num_active")) -> List[CellResult]:
+              metric_keys=("loss", "num_active"),
+              mesh=AUTO, devices=None) -> List[CellResult]:
     """Execute the full grid; optionally append every (cell, hyperparameter
     point) row to ``store`` with its coordinates recorded."""
     # validate every cell upfront — a typo in the last algorithm must not
@@ -385,7 +460,8 @@ def run_sweep(spec: SweepSpec, *, store: Optional[ResultsStore] = None,
     for scheme in spec.schemes:
         for algo in spec.algorithms:
             for cell in run_cell_batch(spec, algo, scheme,
-                                       metric_keys=metric_keys):
+                                       metric_keys=metric_keys,
+                                       mesh=mesh, devices=devices):
                 cells.append(cell)
                 if store is not None:
                     store.append(

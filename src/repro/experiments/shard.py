@@ -1,0 +1,118 @@
+"""Multi-device execution of the batched sweep runner.
+
+``make_batched_run_rounds`` runs all B = points x seeds trajectories of one
+(algorithm, scheme) cell as one compiled program over a leading batch axis.
+Trajectories never exchange data — every reduction in the program is within a
+single trajectory — so that axis is embarrassingly parallel and this module
+splits it across devices with GSPMD:
+
+- a 1-D ``("batch",)`` :class:`~jax.sharding.Mesh` over the participating
+  devices (``repro.launch.mesh.make_batch_mesh``);
+- ``CellBatch.keys / p_base / hparams / data`` placed with their leading
+  axis sharded over ``"batch"`` and ``shared`` (the dataset) replicated,
+  one full copy per device (``repro.sharding.specs``);
+- B padded up to a multiple of the device count by repeating the last real
+  trajectory. Padding rows are full, finite simulations (never NaN inputs
+  that could poison a compiler-introduced collective); their results are
+  sliced away ON THE HOST before anything reaches a ``CellResult`` or a
+  ``ResultsStore`` row.
+
+Because the runner's jitted stages infer shardings from their committed
+inputs, the SAME runner object (and hence the executor's structure-only
+runner cache) serves both paths; the sharded call just compiles a second,
+partitioned executable. Per-trajectory results are bit-for-bit equal to the
+single-device path — each device executes the same per-trajectory program on
+its slice — which ``tests/test_sharded_sweep.py`` asserts on 8 forced host
+devices (``XLA_FLAGS=--xla_force_host_platform_device_count=8``), including
+a B not divisible by the device count.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.experiments.sweep import CellBatch
+from repro.launch.mesh import make_batch_mesh
+from repro.sharding.specs import leading_axis_sharding, replicated_sharding
+
+Mesh = jax.sharding.Mesh
+
+# run_cell_batch's default: shard automatically when >1 device is visible.
+AUTO = "auto"
+
+
+def resolve_batch_mesh(mesh: Union[str, Mesh, None] = AUTO,
+                       devices: Optional[Sequence] = None) -> Optional[Mesh]:
+    """The mesh a sweep call should execute on, or None for the plain
+    single-device path.
+
+    - ``mesh`` a :class:`Mesh`: used as given (must carry a ``"batch"`` axis).
+    - ``mesh=None``: force the single-device path regardless of ``devices``.
+    - ``mesh="auto"`` (default): a ``("batch",)`` mesh over ``devices`` when
+      given (even a single device — an explicit list opts in to the sharded
+      wrapper), else over all visible devices when more than one is up.
+    """
+    if mesh is None:
+        return None
+    if isinstance(mesh, Mesh):
+        if "batch" not in mesh.axis_names:
+            raise ValueError(
+                f"sweep mesh needs a 'batch' axis; got {mesh.axis_names}")
+        return mesh
+    if mesh != AUTO:
+        raise ValueError(f"mesh must be a Mesh, None, or 'auto'; got {mesh!r}")
+    if devices is not None:
+        return make_batch_mesh(devices)
+    return make_batch_mesh() if len(jax.devices()) > 1 else None
+
+
+def pad_batch(batch: CellBatch, multiple: int) -> tuple:
+    """Pad the leading [B] axis of the batched fields up to a multiple of
+    ``multiple`` by repeating the last trajectory; ``shared`` is untouched.
+    Returns ``(padded, B)`` with B the real (pre-padding) batch size, so the
+    caller can slice the padding back off the results."""
+    B = batch.batch_size
+    pad = (-B) % multiple
+    if pad == 0:
+        return batch, B
+
+    def _pad(x):
+        return jnp.concatenate([x, jnp.repeat(x[-1:], pad, axis=0)])
+
+    keys, p_base, hparams, data = jax.tree.map(
+        _pad, (batch.keys, batch.p_base, batch.hparams, batch.data))
+    return CellBatch(keys=keys, p_base=p_base, hparams=hparams, data=data,
+                     shared=batch.shared), B
+
+
+def shard_batch(batch: CellBatch, mesh: Mesh) -> CellBatch:
+    """Commit the batch to ``mesh``: [B]-leading fields split over the
+    ``"batch"`` axis, ``shared`` replicated. The batch size must already be a
+    multiple of the mesh's device count (see ``pad_batch``)."""
+    n = mesh.devices.size
+    if batch.batch_size % n:
+        raise ValueError(
+            f"batch size {batch.batch_size} not divisible by the mesh's "
+            f"{n} devices; pad_batch first")
+    split = leading_axis_sharding(mesh)
+    repl = replicated_sharding(mesh)
+    keys, p_base, hparams, data = jax.tree.map(
+        lambda x: jax.device_put(x, split),
+        (batch.keys, batch.p_base, batch.hparams, batch.data))
+    shared = jax.tree.map(lambda x: jax.device_put(x, repl), batch.shared)
+    return CellBatch(keys=keys, p_base=p_base, hparams=hparams, data=data,
+                     shared=shared)
+
+
+def run_sharded(runner, batch: CellBatch, mesh: Mesh):
+    """Run one cell batch on ``mesh``: pad, shard, execute, and drop the
+    padding rows from every output leaf (host-side slice — padding must never
+    leak into downstream results). Same ``(states, out)`` contract as calling
+    ``runner(batch)`` directly."""
+    padded, B = pad_batch(batch, mesh.devices.size)
+    states, out = runner(shard_batch(padded, mesh))
+    if padded.batch_size == B:
+        return states, out
+    return jax.tree.map(lambda x: x[:B], (states, out))

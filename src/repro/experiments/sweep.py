@@ -130,9 +130,13 @@ def make_batched_run_rounds(loss_fn: Callable, algorithm: Algorithm,
       init_params: ``key -> model params`` (per-trajectory model init).
       num_rounds: static total round count K.
       eval_every / eval_fn: when both set, ``eval_fn(server_params, shared)``
-        runs every ``eval_every`` rounds *inside* the compiled program (plus
-        once at round K when K is not a multiple); the result comes back as
-        ``out["evals"] [B, E]`` with boundaries ``eval_rounds(...)``.
+        runs every ``eval_every`` rounds *inside* the compiled program, under
+        the contract "always at least one eval, the last at round K": a final
+        eval fires at round K when K is not a multiple of ``eval_every`` —
+        including K == 0, where the single eval measures the freshly
+        initialized model (E is never 0). ``eval_every == K`` fires exactly
+        one eval, at K. The result comes back as ``out["evals"] [B, E]`` with
+        boundaries ``eval_rounds(...)``.
 
     Returns ``run(batch: CellBatch) -> (states, out)`` where ``states`` is a
     [B]-batched ``FedState`` and ``out["metrics"]`` maps each metric key to a
@@ -190,7 +194,10 @@ def make_batched_run_rounds(loss_fn: Callable, algorithm: Algorithm,
                                             length=n_chunks)
         # [E, eval_every, ...] -> [E * eval_every, ...]
         mets = jax.tree.map(lambda a: a.reshape((-1,) + a.shape[2:]), mets)
-        if rem:
+        if rem or n_chunks == 0:
+            # the remainder tail, plus the >= 1 eval guarantee: at K == 0
+            # (rem == n_chunks == 0) this runs a zero-length span and evals
+            # the freshly initialized model once
             carry, tail = run_span(carry, rem)
             mets = jax.tree.map(
                 lambda a, b: jnp.concatenate([a, b], 0), mets, tail)
@@ -257,12 +264,17 @@ def make_vmap_run_rounds(loss_fn: Callable, optimizer, algorithm: Algorithm,
 
 def eval_rounds(num_rounds: int, eval_every: int):
     """Round indices (1-based) at which the runner's evals fire.
-    ``eval_every <= 0`` means a single eval at the final round."""
+
+    Contract (mirrored by ``make_batched_run_rounds``): at least one eval,
+    the last at ``num_rounds`` — so ``eval_every == num_rounds`` fires exactly
+    one final eval, and ``num_rounds == 0`` evals the initial model once (at
+    "round 0"). ``eval_every <= 0`` means a single eval at the final round.
+    """
     if eval_every <= 0:
         return [num_rounds]
     n_chunks, rem = divmod(num_rounds, eval_every)
     out = [eval_every * (i + 1) for i in range(n_chunks)]
-    if rem:
+    if rem or not out:
         out.append(num_rounds)
     return out
 

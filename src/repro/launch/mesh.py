@@ -16,6 +16,23 @@ def make_host_mesh():
     return jax.make_mesh((1, 1), ("data", "model"))
 
 
+def make_batch_mesh(devices=None):
+    """1-D ``("batch",)`` mesh for sharding a leading trajectory/batch axis
+    (the sweep engine's flattened point x seed dimension) across devices.
+
+    ``devices`` defaults to all visible devices. On CPU, force several host
+    devices with ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` to
+    exercise the sharded path without accelerators.
+    """
+    import numpy as np
+
+    from jax.sharding import Mesh
+
+    if devices is None:
+        devices = jax.devices()
+    return Mesh(np.asarray(devices), ("batch",))
+
+
 def dp_axes(mesh) -> tuple:
     """The data-parallel axes: ("pod","data") on the multi-pod mesh."""
     return ("pod", "data") if "pod" in mesh.axis_names else ("data",)

@@ -73,6 +73,18 @@ def set_mesh(mesh: Optional[Mesh]):
     _ctx.mesh = mesh
 
 
+def leading_axis_sharding(mesh: Mesh, axis: str = "batch") -> NamedSharding:
+    """Shard dim 0 over ``axis``, replicate the rest — the placement of every
+    [B]-leading leaf in the sweep engine's sharded batch (trailing dims are
+    left unspecified, so one spec serves leaves of any rank >= 1)."""
+    return NamedSharding(mesh, P(axis))
+
+
+def replicated_sharding(mesh: Mesh) -> NamedSharding:
+    """One full copy per device (the sweep engine's ``shared`` dataset)."""
+    return NamedSharding(mesh, P())
+
+
 def _axis_ok(dim: int, mesh: Mesh, axis: str) -> bool:
     return axis in mesh.axis_names and dim % mesh.shape[axis] == 0
 

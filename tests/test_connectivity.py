@@ -58,6 +58,85 @@ def test_markov_stationary_rate():
     np.testing.assert_allclose(rates, np.asarray(p), atol=0.08)
 
 
+def _markov_ensemble_fractions(link, m, T, seed=0):
+    """Per-round empirical ON-fraction over an ensemble of m iid chains."""
+    state = link.init(jax.random.PRNGKey(seed))
+    key = jax.random.PRNGKey(seed + 1)
+    fracs = []
+    for t in range(T):
+        key, k = jax.random.split(key)
+        active, _, state = link.sample(state, jnp.int32(t), k)
+        fracs.append(float(np.mean(np.asarray(active))))
+    return np.asarray(fracs)
+
+
+def _markov_transitions(p):
+    """Table 3 rates (q = ON->OFF, q* = OFF->ON), numpy mirror of the
+    implementation's ``transitions``."""
+    p = np.clip(p, 1e-4, 1 - 1e-4)
+    cond = 0.05 * (1.0 - p) <= p
+    q_star = np.where(cond, 0.05, p / (1.0 - p))
+    q = np.where(cond, 0.05 * (1.0 - p) / p, 1.0)
+    return q, q_star
+
+
+def test_markov_homogeneous_marginal_pinned_every_round():
+    """Time-index audit, homogeneous half: the mask for round t is the
+    post-transition state X_t with X_{-1} ~ Bernoulli(p_base), so the
+    ensemble marginal equals p_base at EVERY round (the Table 3 rates have
+    stationary distribution p_base and init starts the chain there) — an
+    off-by-one that returned the pre-transition state would also pass this,
+    which is why the non-homogeneous test below pins the exact recursion."""
+    m, T, p0 = 4000, 48, 0.3
+    fed = FederationConfig(num_clients=m, scheme="markov", time_varying=False)
+    fracs = _markov_ensemble_fractions(
+        make_link_process(jnp.full((m,), p0), fed), m, T)
+    sigma = np.sqrt(p0 * (1 - p0) / m)
+    assert np.abs(fracs - p0).max() < 5 * sigma
+
+
+def test_markov_nonhom_tracks_p_of_t_over_a_period():
+    """Time-index audit, non-homogeneous half (Eq. 9 dynamics): the round-t
+    mask is driven by rates derived from p_i^t, so the ensemble ON-fraction
+    must (a) match the exact recursion mu_t = (1 - q_t - q*_t) mu_{t-1} +
+    q*_t with (q_t, q*_t) = transitions(p_of_t(t)) and mu_{-1} = p_base —
+    this pins the indexing exactly (shifting the recursion by one round
+    breaks it) — and (b) track p_i^t over a period up to the chain's mixing
+    lag: strong correlation and matching time-averages, not per-round
+    equality (the chain has memory; its marginal lags a fast sine)."""
+    m, T = 4000, 64
+    p0, gamma, period = 0.3, 0.6, 16
+    fed = FederationConfig(num_clients=m, scheme="markov", time_varying=True,
+                           gamma=gamma, period=period)
+    fracs = _markov_ensemble_fractions(
+        make_link_process(jnp.full((m,), p0), fed), m, T)
+
+    mu, mus, pts = p0, [], []
+    for t in range(T):
+        p_t = float(p_of_t(jnp.float32(p0), jnp.float32(t), gamma=gamma,
+                           period=period))
+        q, q_star = _markov_transitions(p_t)
+        mu = mu * (1.0 - q - q_star) + q_star
+        mus.append(mu)
+        pts.append(p_t)
+    mus, pts = np.asarray(mus), np.asarray(pts)
+
+    # (a) exact recursion, round by round (ensemble noise only)
+    assert np.abs(fracs - mus).max() < 5 * np.sqrt(0.25 / m)
+    # an off-by-one (recursion driven by p^{t-1} instead of p^t) must fail (a)
+    mu, shifted = p0, []
+    for t in range(T):
+        q, q_star = _markov_transitions(pts[t - 1] if t else p0)
+        mu = mu * (1.0 - q - q_star) + q_star
+        shifted.append(mu)
+    assert np.abs(np.asarray(shifted) - mus).max() > 10 * np.sqrt(0.25 / m)
+    # (b) tracking over full periods, past the initial transient
+    steady = slice(period, None)
+    corr = np.corrcoef(fracs[steady], pts[steady])[0, 1]
+    assert corr > 0.8
+    assert abs(fracs[steady].mean() - pts[steady].mean()) < 0.05
+
+
 @pytest.mark.parametrize("reset", [False, True])
 def test_cyclic_duty_cycle(reset):
     m = 5

@@ -80,6 +80,46 @@ def test_merge_dedupes_by_cell_key_later_store_wins(tmp_path):
     assert {sha: len(g) for sha, g in groups.items()} == {"aaa": 1, "bbb": 1}
 
 
+def test_merge_dedups_legacy_and_hparam_records_of_same_cell(tmp_path):
+    """A pre-hyperparameter-axis record (no ``hparams`` field — its coords
+    live only in the spec's scalar knobs) and a new record of the SAME cell
+    must share one ``cell_key``, so a re-run under the new engine supersedes
+    the legacy row instead of duplicating it — while legacy rows at OTHER
+    coordinates survive as their own cells."""
+    coords = {"lr": 0.1, "gamma": 0.5, "alpha": 0.1, "sigma0": 10.0,
+              "delta": 0.02}
+    spec = dict(coords, num_clients=8, local_steps=5)
+    base = {"suite": "fig8", "algo": "fedpbc", "scheme": "bernoulli_ti",
+            "seeds": [0, 1], "rounds": 4, "eval_every": 2, "spec": spec}
+
+    legacy = dict(base, git_sha="old")                      # no "hparams"
+    modern = dict(base, hparams=dict(coords), git_sha="new")
+    assert cell_key(legacy) == cell_key(modern)
+    legacy_other = dict(base, git_sha="old",
+                        spec=dict(spec, delta=0.1))         # other ablation pt
+    assert cell_key(legacy_other) != cell_key(legacy)
+
+    old_store = ResultsStore(str(tmp_path / "old"))
+    old_store.append(legacy, arrays={"test_acc": np.asarray([[0.1, 0.2],
+                                                             [0.2, 0.3]])})
+    old_store.append(legacy_other)
+    new_store = ResultsStore(str(tmp_path / "new"))
+    new_store.append(modern, arrays={"test_acc": np.asarray([[0.8, 0.9],
+                                                             [0.7, 0.8]])})
+
+    merged = ResultsStore.merge(str(tmp_path / "m"), old_store, new_store)
+    rows = merged.records()
+    assert len(rows) == 2
+    by_sha = group_by_sha(rows)
+    assert {sha: len(g) for sha, g in by_sha.items()} == {"old": 1, "new": 1}
+    # the deduped cell keeps the NEW record's payload; the surviving legacy
+    # row is the other ablation point
+    np.testing.assert_array_equal(
+        merged.load_arrays(by_sha["new"][0])["test_acc"],
+        np.asarray([[0.8, 0.9], [0.7, 0.8]]))
+    assert by_sha["old"][0]["spec"]["delta"] == 0.1
+
+
 def test_merge_survives_missing_npz(tmp_path, capsys):
     import os
     a = ResultsStore(str(tmp_path / "a"))

@@ -1,0 +1,229 @@
+"""Multi-device sharding of the sweep engine's (point x seed) batch axis.
+
+The acceptance guarantee: sharding the flattened batch axis of
+``make_batched_run_rounds`` over a ``("batch",)`` mesh — including padding B
+up to a device multiple — changes NOTHING per trajectory. Every result leaf
+of the sharded path must be bit-for-bit equal to the single-device path, and
+padding rows must never reach a ``CellResult`` or a ``ResultsStore`` row.
+
+The multi-device tests need more than one device; CI provides 8 forced host
+devices via ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (they skip
+on a plain single-device run, where the auto path is single-device anyway).
+The wrapper-machinery tests (padding, mesh resolution, the explicit
+single-device mesh) run everywhere.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.experiments import SweepSpec, ResultsStore, run_sweep
+from repro.experiments.grid import (
+    _RUNNER_CACHE,
+    _SHARDED_BATCH_CACHE,
+    _runner_for,
+    get_traced_task,
+    make_cell_batch,
+    run_cell_batch,
+)
+from repro.experiments.shard import (
+    pad_batch,
+    resolve_batch_mesh,
+    run_sharded,
+    shard_batch,
+)
+from repro.launch.mesh import make_batch_mesh
+
+N_DEV = len(jax.devices())
+multi_device = pytest.mark.skipif(
+    N_DEV < 2,
+    reason="needs >1 device (XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+
+SEEDS = (0, 1, 2)
+# B = 2 lrs x 3 seeds = 6 trajectories: NOT divisible by 8 devices, so the
+# multi-device tests exercise the padding path end to end
+BASE = SweepSpec(seeds=SEEDS, num_clients=8, dim=16, hidden=16, classes=10,
+                 n_per_class=60, n_train=480, per_client=24,
+                 batch_size=4, local_steps=3, rounds=5, eval_every=2,
+                 lrs=(0.05, 0.1))
+METRIC_KEYS = ("loss", "num_active")
+
+
+def _assert_trees_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_pad_batch_repeats_last_trajectory():
+    task = get_traced_task(BASE)
+    fed = BASE.cell_config("fedpbc", "bernoulli_tv")
+    batch = make_cell_batch(BASE, fed, task)
+    B = batch.batch_size
+    assert B == 6
+
+    same, b_real = pad_batch(batch, 3)          # 3 | 6: no-op, same object
+    assert same is batch and b_real == B
+
+    padded, b_real = pad_batch(batch, 4)        # 6 -> 8
+    assert b_real == B and padded.batch_size == 8
+    for x, p in zip(jax.tree.leaves((batch.keys, batch.p_base, batch.hparams,
+                                     batch.data)),
+                    jax.tree.leaves((padded.keys, padded.p_base,
+                                     padded.hparams, padded.data))):
+        np.testing.assert_array_equal(np.asarray(p[:B]), np.asarray(x))
+        for row in np.asarray(p[B:]):
+            np.testing.assert_array_equal(row, np.asarray(x[-1]))
+    # shared is untouched (it has no batch axis to pad)
+    _assert_trees_equal(padded.shared, batch.shared)
+
+
+def test_resolve_batch_mesh_semantics():
+    assert resolve_batch_mesh(None) is None
+    assert resolve_batch_mesh(None, devices=jax.devices()) is None
+    # an explicit device list opts in, even with a single device
+    mesh1 = resolve_batch_mesh("auto", devices=jax.devices()[:1])
+    assert mesh1.axis_names == ("batch",) and mesh1.devices.size == 1
+    auto = resolve_batch_mesh()
+    if N_DEV > 1:
+        assert auto is not None and auto.devices.size == N_DEV
+    else:
+        assert auto is None
+    explicit = make_batch_mesh()
+    assert resolve_batch_mesh(explicit) is explicit
+    with pytest.raises(ValueError, match="'batch' axis"):
+        from repro.launch.mesh import make_host_mesh
+        resolve_batch_mesh(make_host_mesh())
+    with pytest.raises(ValueError, match="mesh must be"):
+        resolve_batch_mesh("everywhere")
+
+
+@multi_device
+def test_shard_batch_requires_divisible_batch():
+    task = get_traced_task(BASE)
+    fed = BASE.cell_config("fedpbc", "bernoulli_tv")
+    batch = make_cell_batch(BASE, fed, task)    # B = 6
+    mesh = make_batch_mesh()
+    if batch.batch_size % mesh.devices.size == 0:
+        pytest.skip("device count divides B here")
+    with pytest.raises(ValueError, match="not divisible"):
+        shard_batch(batch, mesh)
+
+
+def test_explicit_single_device_mesh_matches_plain_path():
+    """The pad/shard/slice wrapper itself must be a numeric no-op: an
+    explicit 1-device mesh (wrapper engaged) equals the plain path bitwise.
+    Runs in every environment, multi-device or not."""
+    plain = run_cell_batch(BASE, "fedpbc", "bernoulli_tv",
+                           metric_keys=METRIC_KEYS, mesh=None)
+    wrapped = run_cell_batch(BASE, "fedpbc", "bernoulli_tv",
+                             metric_keys=METRIC_KEYS,
+                             devices=jax.devices()[:1])
+    assert len(plain) == len(wrapped) == 2
+    for a, b in zip(plain, wrapped):
+        assert a.hparams == b.hparams
+        np.testing.assert_array_equal(a.test_acc, b.test_acc)
+        np.testing.assert_array_equal(a.train_acc, b.train_acc)
+        np.testing.assert_array_equal(a.loss, b.loss)
+        np.testing.assert_array_equal(a.num_active, b.num_active)
+
+
+def test_sharded_batch_cache_is_period_independent():
+    """Cells differing only in a ``period`` fed_override must reuse ONE
+    committed copy of the heavy batch arrays (the cache key excludes fed);
+    only the tiny [B] period vector is rebuilt — and it must still be wired,
+    i.e. the two periods produce different activation trajectories."""
+    spec20 = dataclasses.replace(BASE, fed_overrides=(("period", 20),))
+    spec40 = dataclasses.replace(spec20, fed_overrides=(("period", 40),))
+    one_dev = jax.devices()[:1]
+    n0 = len(_SHARDED_BATCH_CACHE)
+    c20 = run_cell_batch(spec20, "fedpbc", "bernoulli_tv",
+                         metric_keys=METRIC_KEYS, devices=one_dev)
+    c40 = run_cell_batch(spec40, "fedpbc", "bernoulli_tv",
+                         metric_keys=METRIC_KEYS, devices=one_dev)
+    assert len(_SHARDED_BATCH_CACHE) <= n0 + 1
+    assert not np.array_equal(np.concatenate([c.num_active for c in c20]),
+                              np.concatenate([c.num_active for c in c40]))
+
+
+@multi_device
+def test_sharded_runner_bit_for_bit_with_padding():
+    """8 forced host devices, B = 6 (padded to 8): every leaf of (states,
+    out) from the sharded path equals the single-device run of the SAME
+    cached runner, per trajectory."""
+    task = get_traced_task(BASE)
+    fed = BASE.cell_config("fedpbc", "bernoulli_tv")
+    runner = _runner_for(BASE, fed, task, METRIC_KEYS)
+    n_runners = len(_RUNNER_CACHE)
+    batch = make_cell_batch(BASE, fed, task)
+    mesh = resolve_batch_mesh()
+    assert mesh.devices.size == N_DEV and batch.batch_size % N_DEV != 0
+
+    ref_states, ref_out = runner(batch)                 # single-device
+    sh_states, sh_out = run_sharded(runner, batch, mesh)
+    _assert_trees_equal((sh_states, sh_out), (ref_states, ref_out))
+    # both paths share ONE runner — the executor cache key is placement-free
+    assert len(_RUNNER_CACHE) == n_runners
+    assert _runner_for(BASE, fed, task, METRIC_KEYS) is runner
+
+
+@multi_device
+def test_sharded_outputs_live_on_all_devices():
+    """The sharded run must actually split the batch axis: result leaves are
+    laid out across every mesh device, not silently replicated on one."""
+    task = get_traced_task(BASE)
+    fed = BASE.cell_config("fedpbc", "bernoulli_tv")
+    runner = _runner_for(BASE, fed, task, METRIC_KEYS)
+    batch, _ = pad_batch(make_cell_batch(BASE, fed, task), N_DEV)
+    mesh = resolve_batch_mesh()
+    states, out = runner(shard_batch(batch, mesh))
+    loss = out["metrics"]["loss"]
+    assert len(loss.sharding.device_set) == N_DEV
+    shard_rows = {s.index[0].start for s in loss.addressable_shards}
+    assert len(shard_rows) == N_DEV                     # distinct batch slices
+    assert len(jax.tree.leaves(states.server)[0].sharding.device_set) == N_DEV
+
+
+@multi_device
+def test_run_cell_batch_auto_shards_and_matches():
+    """The default (auto) path picks the sharded runner when >1 device is
+    visible and returns per-point results identical to mesh=None."""
+    plain = run_cell_batch(BASE, "fedpbc", "bernoulli_tv",
+                           metric_keys=METRIC_KEYS, mesh=None)
+    auto = run_cell_batch(BASE, "fedpbc", "bernoulli_tv",
+                          metric_keys=METRIC_KEYS)
+    for a, b in zip(plain, auto):
+        assert a.hparams == b.hparams
+        np.testing.assert_array_equal(a.test_acc, b.test_acc)
+        np.testing.assert_array_equal(a.train_acc, b.train_acc)
+        np.testing.assert_array_equal(a.loss, b.loss)
+        np.testing.assert_array_equal(a.num_active, b.num_active)
+
+
+@multi_device
+def test_padded_sharded_sweep_writes_exactly_b_real_rows(tmp_path):
+    """End to end through the store: a padded-B sharded sweep appends exactly
+    one row per hyperparameter point with [S]-seed arrays — the two padding
+    trajectories (6 -> 8) never leak into any row's payload."""
+    store = ResultsStore(str(tmp_path / "sweeps"))
+    n_sharded = len(_SHARDED_BATCH_CACHE)
+    cells = run_sweep(BASE, store=store, suite="shard-smoke",
+                      metric_keys=METRIC_KEYS)
+    # one padded+committed batch serves every cell of the sweep (the cells
+    # share seeds/points/period, so the device transfer is memoized)
+    assert len(_SHARDED_BATCH_CACHE) <= n_sharded + 1
+    points = BASE.hparam_points()
+    assert len(cells) == len(points) * len(BASE.algorithms) * len(BASE.schemes)
+    rows = store.records(suite="shard-smoke")
+    assert len(rows) == len(cells)
+    for row, cell in zip(rows, cells):
+        arrays = store.load_arrays(row)
+        assert arrays["test_acc"].shape == (len(SEEDS), 3)
+        assert arrays["loss"].shape == (len(SEEDS), BASE.rounds)
+        np.testing.assert_array_equal(arrays["test_acc"], cell.test_acc)
+        # padding repeats the LAST real trajectory; if a padded row leaked,
+        # it would duplicate seed -1's trajectory — all seeds stay distinct
+        assert len({a.tobytes() for a in arrays["test_acc"]}) == len(SEEDS)

@@ -157,6 +157,79 @@ def test_vmap_eval_chunking_matches_chunked_sequential():
                                       np.asarray(jnp.stack(seq_evals[i])))
 
 
+def test_eval_rounds_contract():
+    """At least one eval, the last at num_rounds — for every edge case."""
+    assert eval_rounds(7, 3) == [3, 6, 7]
+    assert eval_rounds(6, 6) == [6]          # cadence == K: exactly one, at K
+    assert eval_rounds(3, 5) == [3]          # cadence > K: one final eval
+    assert eval_rounds(0, 3) == [0]          # K == 0: eval the initial model
+    assert eval_rounds(5, 0) == [5]          # no cadence: single final eval
+    assert eval_rounds(0, 0) == [0]
+    for K, e in [(7, 3), (6, 6), (3, 5), (0, 3), (12, 4)]:
+        rounds = eval_rounds(K, e)
+        assert len(rounds) >= 1 and rounds[-1] == K
+
+
+def test_eval_contract_num_rounds_zero_evals_initial_model():
+    """K=0 with a cadence must return ONE eval (of the freshly initialized
+    model) and zero-round metrics — not a zero-length eval axis that breaks
+    every [S, E] consumer downstream."""
+    task = _task()
+    fed = SPEC.cell_config("fedpbc", "bernoulli_ti")
+    runner = make_vmap_run_rounds(
+        task.loss_fn, sgd(paper_decay(SPEC.lr)), make_algorithm(fed), fed,
+        task.source, link_factory=lambda p: make_link_process(p, fed),
+        init_params=task.init_params, num_rounds=0,
+        eval_every=3, eval_fn=task.eval_test)
+    states, out = runner(stack_seed_keys(SEEDS), seed_base_probs(SPEC))
+    assert out["evals"].shape == (len(SEEDS), 1)
+    assert out["metrics"]["loss"].shape == (len(SEEDS), 0)
+    for i, seed in enumerate(SEEDS):
+        init_params = task.init_params(seed_keys(seed)["params"])
+        np.testing.assert_array_equal(
+            np.asarray(out["evals"][i, 0]),
+            np.asarray(task.eval_test(init_params)))
+        _assert_trees_equal(jax.tree.map(lambda x: x[i], states.server),
+                            init_params)
+
+    # and through the executor: a rounds=0 cell yields [S, 1] evals and
+    # [S, 0] per-round metrics
+    import dataclasses
+    spec0 = dataclasses.replace(SPEC, rounds=0, eval_every=2)
+    cell = run_cell(spec0, "fedpbc", "bernoulli_ti")
+    assert cell.eval_rounds == [0]
+    assert cell.test_acc.shape == (len(SEEDS), 1)
+    assert cell.loss.shape == (len(SEEDS), 0)
+    assert cell.final_test().shape == (len(SEEDS),)
+
+
+def test_eval_every_equals_num_rounds_fires_exactly_one_final_eval():
+    """cadence == K: one eval, at round K, equal to the sequential final
+    eval (not zero evals, not a duplicated final eval)."""
+    task = _task()
+    fed = SPEC.cell_config("fedpbc", "bernoulli_ti")
+    algo = make_algorithm(fed)
+    opt = sgd(paper_decay(SPEC.lr))
+    K = 6
+    runner = make_vmap_run_rounds(
+        task.loss_fn, opt, algo, fed, task.source,
+        link_factory=lambda p: make_link_process(p, fed),
+        init_params=task.init_params, num_rounds=K,
+        eval_every=K, eval_fn=task.eval_test)
+    p_base = seed_base_probs(SPEC)
+    states, out = runner(stack_seed_keys(SEEDS), p_base)
+    assert out["evals"].shape == (len(SEEDS), 1)
+    assert out["metrics"]["loss"].shape == (len(SEEDS), K)
+
+    seq_states, _, seq_evals = _sequential_reference(
+        task, fed, algo, opt, p_base, K, chunks=(K,))
+    for i in range(len(SEEDS)):
+        _assert_trees_equal(jax.tree.map(lambda x: x[i], states),
+                            seq_states[i])
+        np.testing.assert_array_equal(np.asarray(out["evals"][i]),
+                                      np.asarray(jnp.stack(seq_evals[i])))
+
+
 def test_results_store_roundtrip(tmp_path):
     store = ResultsStore(str(tmp_path / "sweeps"))
     acc = np.linspace(0.1, 0.9, 6).reshape(2, 3)
@@ -241,3 +314,10 @@ def test_sweep_throughput_bench_records_speedup():
         # the baked path compiles a pair per grid point
         assert ab["traced_compile_entries"] == 2, ab
         assert ab["per_value_compile_entries"] == 2 * ab["n_points"], ab
+    # the device-scaling arm always records an entry; when it ran sharded,
+    # the placement change must not have moved a single trajectory
+    ds = bench["device_scaling"]
+    assert ds["n_devices"] >= 1 and ds["single_device_cells_per_s"] > 0, ds
+    if ds["n_devices"] > 1:
+        assert ds["trajectory_max_abs_diff"] == 0.0, ds
+        assert ds["sharded_cells_per_s"] > 0, ds

@@ -179,6 +179,61 @@ def test_value_ablation_reuses_one_compile():
     assert runner.scan_batch._cache_size() == 1
 
 
+def test_period_override_shares_compile_and_changes_trajectory():
+    """``fed_overrides=(("period", P),)`` is a traced hparam, not a compile
+    knob: the runner cache zeroes ``period`` in its key, so two specs
+    differing only in the override must hand back the SAME runner with no
+    new jit entries — yet the traced ``hp["period"]`` input must actually be
+    wired from the override, i.e. the trajectories must differ AND match a
+    sequential run with that period baked into the link process."""
+    spec20 = dataclasses.replace(BASE, rounds=5, eval_every=3, seeds=(0,),
+                                 fed_overrides=(("period", 20),))
+    spec40 = dataclasses.replace(spec20, fed_overrides=(("period", 40),))
+
+    # the override reaches the traced input
+    fed20 = spec20.cell_config("fedpbc", "bernoulli_tv")
+    batch20 = make_cell_batch(spec20, fed20, get_traced_task(spec20))
+    np.testing.assert_array_equal(np.asarray(batch20.hparams["period"]),
+                                  np.full((1,), 20.0, np.float32))
+
+    cells20 = run_cell_batch(spec20, "fedpbc", "bernoulli_tv",
+                             metric_keys=METRIC_KEYS, mesh=None)
+    runner = _runner_for(spec20, fed20, get_traced_task(spec20), METRIC_KEYS)
+    n_runners = len(_RUNNER_CACHE)
+    has_introspection = hasattr(runner.scan_batch, "_cache_size")
+    if has_introspection:
+        n_entries = (runner.init_batch._cache_size()
+                     + runner.scan_batch._cache_size())
+
+    cells40 = run_cell_batch(spec40, "fedpbc", "bernoulli_tv",
+                             metric_keys=METRIC_KEYS, mesh=None)
+    # one compile serves both periods...
+    assert len(_RUNNER_CACHE) == n_runners
+    assert _runner_for(spec40, spec40.cell_config("fedpbc", "bernoulli_tv"),
+                       get_traced_task(spec40), METRIC_KEYS) is runner
+    if has_introspection:
+        assert (runner.init_batch._cache_size()
+                + runner.scan_batch._cache_size()) == n_entries
+    # ...but the trajectories differ: period shapes p_of_t, which drives the
+    # Bernoulli activations (num_active is the link process's fingerprint;
+    # a loss difference would only surface once an aggregation diverges)
+    assert not np.array_equal(cells20[0].num_active, cells40[0].num_active)
+
+    # and each matches the sequential path with its period BAKED into the
+    # link process (cell_config carries the override into fed.period)
+    for spec, cells in ((spec20, cells20), (spec40, cells40)):
+        pt = spec.hparam_points()[0]
+        p_base = point_base_probs(spec, pt)
+        _, mets_seq, evals_seq = _sequential_point(
+            spec, "fedpbc", "bernoulli_tv", pt, 0, p_base[0], chunks=(3, 2))
+        np.testing.assert_array_equal(np.asarray(cells[0].loss[0]),
+                                      np.asarray(mets_seq["loss"]))
+        np.testing.assert_array_equal(np.asarray(cells[0].num_active[0]),
+                                      np.asarray(mets_seq["num_active"]))
+        np.testing.assert_array_equal(np.asarray(cells[0].test_acc[0]),
+                                      np.asarray(evals_seq))
+
+
 def test_hparam_points_flattening_and_result_coords():
     """Point-major flattening: every CellResult carries its coordinates, in
     ``itertools.product`` order over (lr, gamma, alpha, sigma0, delta)."""
