@@ -1,6 +1,7 @@
 """Benchmark driver — one module per paper table/figure. Prints CSV.
 
   python -m benchmarks.run                    # default (CPU-budget) suite
+  python -m benchmarks.run --list             # what can run, then exit
   python -m benchmarks.run --only fig3
   python -m benchmarks.run --only fig2,table1,sweep   # comma-separated list
   python -m benchmarks.run --rounds 400       # longer federated runs
@@ -10,15 +11,42 @@ from __future__ import annotations
 import argparse
 import time
 
+# suite name -> (one-line description, arms within the suite's BENCH output).
+# --list prints this table so nobody greps the source for --only values.
+SUITE_INFO = {
+    "fig2": ("Eq.-3 FedAvg bias series vs simulation", ()),
+    "fig3": ("quadratic counterexample convergence curves", ()),
+    "table1": ("final test accuracy grid (algorithms x schemes)", ()),
+    "table2": ("rounds-to-target-accuracy grid", ()),
+    "fig8": ("alpha/gamma/delta/sigma0 ablations on one traced axis", ()),
+    "extensions": ("beyond-paper extensions (fedpbc_m momentum)", ()),
+    "throughput": ("scanned round engine vs per-round dispatch", ()),
+    "sweep": ("batched sweep engine vs sequential/per-value baselines",
+              ("seed_axis", "hparam_ablation", "algo_axis",
+               "device_scaling")),
+    "roofline": ("arithmetic-intensity roofline of the model zoo", ()),
+    "kernels": ("pallas kernels vs reference ops", ()),
+}
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of "
-                         "fig2|fig3|table1|table2|fig8|extensions|throughput|"
-                         "sweep|roofline|kernels (e.g. --only fig2,table1)")
+                         f"{'|'.join(SUITE_INFO)} (e.g. --only fig2,table1)")
+    ap.add_argument("--list", action="store_true",
+                    help="print available suites (and their BENCH arms) and "
+                         "exit")
     ap.add_argument("--rounds", type=int, default=250)
     args = ap.parse_args()
+
+    if args.list:
+        for name, (desc, arms) in SUITE_INFO.items():
+            line = f"{name:12s} {desc}"
+            if arms:
+                line += f"  [arms: {', '.join(arms)}]"
+            print(line)
+        return
 
     from benchmarks import (
         extensions,
@@ -45,6 +73,7 @@ def main() -> None:
         "roofline": lambda: roofline.run(),
         "kernels": lambda: kernels_bench.run(),
     }
+    assert set(suites) == set(SUITE_INFO)
     if args.only:
         names = [n.strip() for n in args.only.split(",") if n.strip()]
         unknown = [n for n in names if n not in suites]

@@ -27,8 +27,21 @@ baselines, on two axes.
      traced index table. Compile counts for both arms come from the runners'
      jit cache sizes.
 
-3. **Device axis** (this refactor's acceptance workload): the SAME batched
-   cell program executed single-device vs sharded over a ``("batch",)`` mesh
+3. **Algorithm axis** (the AlgorithmSpec-refactor acceptance workload): the
+   state-compatible fedpbc/fedavg/fedavg_all/fedavg_known_p family — the
+   paper's FedPBC-vs-baselines comparison — run two ways:
+
+   - ``per-algorithm``: one statically-dispatched runner per algorithm (a
+     fresh (init, scan) compile pair each, 4 programs total) — the
+     pre-refactor cost model;
+   - ``batched``: ONE switch-based family program over the joint
+     (algo x point x seed) batch axis, the traced ``algo_id`` selecting each
+     trajectory's rule. Compile counts come from the runners' jit caches
+     (``algo_axis.batched_compile_programs`` must be 1 vs one per algorithm
+     for the baseline), and the arms' trajectories are asserted to agree.
+
+4. **Device axis**: the SAME batched cell program executed single-device vs
+   sharded over a ``("batch",)`` mesh
    of every visible device (``repro.experiments.shard``), warm timings both
    ways plus the max per-trajectory deviation (must be 0.0 — sharding the
    batch axis is a placement change, not a numeric one). Runnable on CPU via
@@ -50,8 +63,10 @@ headline ``hparam_ablation.speedup``.
 The figure of merit is cells/sec where one "cell" = one trajectory of
 ``rounds`` rounds. Prints a ``BENCH {...}`` JSON line and writes
 ``benchmarks/out/sweep_throughput.json``. Acceptance bars: ``speedup >= 2``
-(warm vmapped vs sequential, seed axis) and ``hparam_ablation.speedup >= 2``
-(traced ablation at unseen values vs the per-value-recompile path).
+(warm vmapped vs sequential, seed axis), ``hparam_ablation.speedup >= 2``
+(traced ablation at unseen values vs the per-value-recompile path), and
+``algo_axis.batched_compile_programs == 1`` with
+``algo_axis.speedup_cold > 1`` (one family compile vs one per algorithm).
 """
 from __future__ import annotations
 
@@ -64,8 +79,10 @@ import jax
 import numpy as np
 
 from repro.core import init_fed_state, make_algorithm, make_link_process, make_run_rounds
+from repro.core.algorithms import algo_family, make_algorithm_spec
 from repro.experiments import (
     SweepSpec,
+    make_batched_run_rounds,
     make_classification_task,
     make_vmap_run_rounds,
     run_cell,
@@ -90,6 +107,16 @@ def _cache_entries(runner) -> int:
             and hasattr(runner.scan_batch, "_cache_size")):
         return -1
     return runner.init_batch._cache_size() + runner.scan_batch._cache_size()
+
+
+def _tree_max_abs_diff(a, b) -> float:
+    """Max per-leaf |a - b| over two result pytrees of equal structure,
+    skipping AlgoState's zero-sized (unused) leaves."""
+    return max(
+        float(np.abs(np.asarray(x, np.float64)
+                     - np.asarray(y, np.float64)).max())
+        for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b))
+        if np.asarray(x).size)
 
 
 def _sequential_seed_arm(spec: SweepSpec, lr: float):
@@ -152,6 +179,90 @@ def _per_value_recompile_arm(spec: SweepSpec, points):
     return np.asarray(evals), cache_entries
 
 
+def _algo_axis_arm(spec: SweepSpec):
+    """The fedavg-family x FedPBC grid two ways: one switch-based family
+    program (1 compile) vs one statically-dispatched program per algorithm
+    (4 compiles). Fresh runners on both arms (the executor cache is
+    bypassed) so the compile cost each pays is its own. Returns the
+    ``algo_axis`` BENCH sub-dict."""
+    family = algo_family("fedavg")      # (fedpbc, fedavg, fedavg_all, known_p)
+    task = get_traced_task(spec)
+    fed = spec.cell_config(family[0], "bernoulli_ti")
+
+    def _make_runner(algorithm, cfg):
+        return make_batched_run_rounds(
+            task.loss_fn, algorithm, cfg,
+            optimizer_factory=lambda hp: sgd(paper_decay(hp["lr"])),
+            link_factory=lambda p, hp: make_link_process(
+                p, cfg, gamma=hp["gamma"], period=hp["period"]),
+            source_factory=task.source_factory,
+            init_params=task.init_params,
+            num_rounds=spec.rounds, eval_every=spec.eval_every,
+            eval_fn=task.eval_test, metric_keys=("loss", "num_active"))
+
+    def timed(fn):
+        t0 = time.perf_counter()
+        out = fn()
+        jax.block_until_ready(out)
+        return time.perf_counter() - t0, out
+
+    # batched arm: the whole family as ONE program over the joint batch
+    fam_runner = _make_runner(make_algorithm_spec(family, fed), fed)
+    fam_batch = make_cell_batch(spec, fed, task, algos=family)
+    B = fam_batch.batch_size
+    fam_cold_s, fam_out = timed(lambda: fam_runner(fam_batch))
+    fam_warm_s, _ = timed(lambda: fam_runner(fam_batch))
+    fam_entries = _cache_entries(fam_runner)
+
+    # per-algorithm arm: a fresh statically-bound runner (and compile) each
+    per_cold_s = per_warm_s = 0.0
+    per_entries, per_outs = 0, []
+    for algo in family:
+        fed_a = spec.cell_config(algo, "bernoulli_ti")
+        runner_a = _make_runner(make_algorithm(fed_a), fed_a)
+        batch_a = dataclasses.replace(
+            make_cell_batch(spec, fed_a, task), algo_id=())
+        cold, out_a = timed(lambda: runner_a(batch_a))
+        warm, _ = timed(lambda: runner_a(batch_a))
+        per_cold_s += cold
+        per_warm_s += warm
+        per_outs.append(out_a)
+        n = _cache_entries(runner_a)
+        per_entries = -1 if n < 0 or per_entries < 0 else per_entries + n
+
+    ref = jax.tree.map(lambda *xs: np.concatenate(
+        [np.asarray(x) for x in xs]), *per_outs)
+    diff = _tree_max_abs_diff(fam_out, ref)
+    if diff > 1e-5:
+        raise RuntimeError(
+            f"family-batched and per-algorithm trajectories diverged: {diff}")
+    return {
+        "family": list(family),
+        "n_algos": len(family),
+        "n_points": len(spec.hparam_points()),
+        "n_seeds": len(spec.seeds),
+        "rounds": spec.rounds,
+        "n_cells": B,
+        "batched_seconds_cold": round(fam_cold_s, 4),
+        "batched_seconds_warm": round(fam_warm_s, 4),
+        "per_algo_seconds_cold": round(per_cold_s, 4),
+        "per_algo_seconds_warm": round(per_warm_s, 4),
+        "batched_cold_cells_per_s": round(B / fam_cold_s, 4),
+        "batched_cells_per_s": round(B / fam_warm_s, 4),
+        "per_algo_cold_cells_per_s": round(B / per_cold_s, 4),
+        "per_algo_cells_per_s": round(B / per_warm_s, 4),
+        # (init, scan) pairs: ONE program for the whole family vs one per
+        # algorithm; -1 when jit cache introspection is unavailable
+        "batched_compile_programs":
+            fam_entries // 2 if fam_entries >= 0 else -1,
+        "per_algo_compile_programs":
+            per_entries // 2 if per_entries >= 0 else -1,
+        "trajectory_max_abs_diff": diff,
+        "speedup_cold": round(per_cold_s / fam_cold_s, 2),
+        "speedup_warm": round(per_warm_s / fam_warm_s, 2),
+    }
+
+
 def _device_scaling_arm(spec: SweepSpec, scaling_lrs=(0.03, 0.05, 0.1, 0.2)):
     """Warm single-device vs sharded execution of one batched cell (B =
     len(scaling_lrs) x S trajectories, padded to the device count). Returns
@@ -196,10 +307,7 @@ def _device_scaling_arm(spec: SweepSpec, scaling_lrs=(0.03, 0.05, 0.1, 0.2)):
     sharded_s, sh = timed(lambda: runner(sharded))
     if padded.batch_size != b_real:
         sh = jax.tree.map(lambda x: x[:b_real], sh)
-    diff = max(
-        float(np.abs(np.asarray(a, np.float64)
-                     - np.asarray(b, np.float64)).max())
-        for a, b in zip(jax.tree.leaves(ref), jax.tree.leaves(sh)))
+    diff = _tree_max_abs_diff(ref, sh)
     # a placement change must not change a single trajectory
     if diff != 0.0:
         raise RuntimeError(
@@ -283,6 +391,11 @@ def run(csv=True, *, rounds=100, m=32, n_seeds=8, seed0=0, out_path=None,
         raise RuntimeError(
             f"traced-lr and baked-lr trajectories diverged: {ab_diff}")
 
+    # --- algorithm axis: the fedavg family in one program vs one per algo
+    algo_axis = _algo_axis_arm(
+        dataclasses.replace(spec, seeds=ab_seeds, rounds=ab_rounds,
+                            eval_every=min(25, ab_rounds)))
+
     # --- device axis: the same batched program, single-device vs sharded
     device_scaling = _device_scaling_arm(
         dataclasses.replace(spec, seeds=ab_seeds, rounds=ab_rounds,
@@ -332,6 +445,7 @@ def run(csv=True, *, rounds=100, m=32, n_seeds=8, seed0=0, out_path=None,
             "speedup": round(baseline_s / traced_new_values_s, 2),
             "speedup_first_run": round(baseline_s / traced_cold_s, 2),
         },
+        "algo_axis": algo_axis,
         "device_scaling": device_scaling,
         "backend": jax.default_backend(),
     }

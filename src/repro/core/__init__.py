@@ -1,5 +1,16 @@
 """FedPBC core: the paper's primary contribution in JAX."""
-from repro.core.algorithms import ALGORITHMS, Algorithm, make_algorithm, masked_mean
+from repro.core.algorithms import (
+    ALGORITHMS,
+    AlgoState,
+    Algorithm,
+    AlgorithmSpec,
+    algo_family,
+    as_algorithm,
+    make_algorithm,
+    make_algorithm_spec,
+    masked_mean,
+    state_signature,
+)
 from repro.core.connectivity import (
     LinkProcess,
     build_base_probs,
@@ -19,9 +30,15 @@ from repro.core.federated import (
 
 __all__ = [
     "ALGORITHMS",
+    "AlgoState",
     "Algorithm",
+    "AlgorithmSpec",
+    "algo_family",
+    "as_algorithm",
     "make_algorithm",
+    "make_algorithm_spec",
     "masked_mean",
+    "state_signature",
     "LinkProcess",
     "build_base_probs",
     "make_link_process",

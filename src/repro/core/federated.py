@@ -32,7 +32,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import FederationConfig
-from repro.core.algorithms import Algorithm, make_algorithm
+from repro.core.algorithms import (
+    Algorithm,
+    AlgorithmSpec,
+    as_algorithm,
+    make_algorithm,
+)
 from repro.core.connectivity import LinkProcess
 from repro.models.flags import scan_unroll
 
@@ -53,7 +58,11 @@ class FedState:
 
 
 def init_fed_state(key, server_params, fed_cfg: FederationConfig,
-                   algorithm: Algorithm, link: LinkProcess, optimizer) -> FedState:
+                   algorithm, link: LinkProcess, optimizer) -> FedState:
+    """``algorithm`` may be an ``Algorithm`` or an ``AlgorithmSpec`` (whose
+    unified ``init`` is dispatch-independent: every family member shares one
+    state container)."""
+    algorithm = as_algorithm(algorithm)
     m = fed_cfg.num_clients
     k_link, k_state = jax.random.split(key)
     clients = jax.tree.map(
@@ -91,15 +100,22 @@ def local_steps(loss_fn, optimizer, params, opt_state, batches, s: int):
     return params, opt_state, losses.mean()
 
 
-def make_round_fn(loss_fn: Callable, optimizer, algorithm: Algorithm,
+def make_round_fn(loss_fn: Callable, optimizer, algorithm,
                   link: LinkProcess, fed_cfg: FederationConfig,
-                  spmd_axis_name: Optional[str] = None):
+                  spmd_axis_name: Optional[str] = None,
+                  algo_id=0):
     """Build the jit-able round function.
+
+    ``algorithm``: an ``Algorithm``, or an ``AlgorithmSpec`` table bound at
+    ``algo_id`` — which may be a *traced* scalar, in which case the round's
+    client-start/aggregate lower to the family's branchless switch and one
+    round function serves every member.
 
     ``spmd_axis_name``: mesh axis the client dimension is sharded over in the
     ``pod_silo`` placement (vmap's spmd_axis_name); None for simulated /
     stacked_data placements.
     """
+    algorithm = as_algorithm(algorithm, algo_id)
     s = fed_cfg.local_steps
 
     def round_fn(state: FedState, batches) -> tuple:
@@ -161,12 +177,16 @@ def make_round_step(round_fn, source):
     return step
 
 
-def make_run_rounds(loss_fn: Callable, optimizer, algorithm: Algorithm,
+def make_run_rounds(loss_fn: Callable, optimizer, algorithm,
                     link: LinkProcess, fed_cfg: FederationConfig, source,
                     spmd_axis_name: Optional[str] = None,
                     metric_keys=DEFAULT_METRIC_KEYS,
-                    donate: Optional[bool] = None):
+                    donate: Optional[bool] = None,
+                    algo_id=0):
     """Build the scanned multi-round entry point.
+
+    ``algorithm`` may be an ``AlgorithmSpec`` table bound at ``algo_id``
+    (see ``make_round_fn``).
 
     Returns ``run_rounds(state, ds_state, data_key, num_rounds)`` →
     ``(state', ds_state', metrics)`` where every entry of ``metrics`` is a
@@ -178,7 +198,7 @@ def make_run_rounds(loss_fn: Callable, optimizer, algorithm: Algorithm,
     without doubling peak memory.
     """
     round_fn = make_round_fn(loss_fn, optimizer, algorithm, link, fed_cfg,
-                             spmd_axis_name)
+                             spmd_axis_name, algo_id=algo_id)
     step = make_round_step(round_fn, source)
     if donate is None:
         donate = jax.default_backend() != "cpu"  # CPU ignores donation noisily

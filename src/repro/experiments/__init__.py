@@ -1,14 +1,18 @@
 """Vectorized experiment sweeps: grid specs -> device-batched simulations.
 
-- ``sweep``   — ``make_batched_run_rounds``: all (hyperparameter point x
-  seed) trajectories of one (algo, scheme) cell as ONE compiled program over
-  a traced ``CellBatch``; ``make_vmap_run_rounds`` is the single-point
-  seed-axis wrapper; plus the sweep CLI.
+- ``sweep``   — ``make_batched_run_rounds``: all (algorithm x hyperparameter
+  point x seed) trajectories of one (algorithm-family, scheme) cell as ONE
+  compiled program over a traced ``CellBatch`` (the algorithm selected per
+  trajectory by a traced ``algo_id`` into an ``AlgorithmSpec`` table);
+  ``make_vmap_run_rounds`` is the single-point seed-axis wrapper; plus the
+  sweep CLI.
 - ``grid``    — ``SweepSpec`` grids (with ``lrs``/``gammas``/``alphas``/
-  ``sigma0s``/``deltas`` axes), the executor, structure-only compile caches.
+  ``sigma0s``/``deltas`` axes and algorithm-family batching), the executor,
+  structure-only compile caches.
 - ``shard``   — multi-device execution of the batched runner: the flattened
-  (point x seed) batch axis sharded over a ``("batch",)`` mesh, ``shared``
-  replicated, B padded to a device multiple (padding dropped on the host).
+  (algo x point x seed) batch axis sharded over a ``("batch",)`` mesh,
+  ``shared`` replicated, B padded to a device multiple (padding dropped on
+  the host).
 - ``results`` — append-only JSONL/npz results store with mean/CI summaries,
   cross-store ``merge`` + CLI.
 - ``plots``   — figure-style curve CSV exports straight from a store.
@@ -47,6 +51,7 @@ from repro.experiments.tasks import (
     mlp_accuracy,
     mlp_init,
     mlp_loss,
+    with_label_noise,
 )
 
 __all__ = [
@@ -78,4 +83,5 @@ __all__ = [
     "mlp_accuracy",
     "mlp_init",
     "mlp_loss",
+    "with_label_noise",
 ]

@@ -2,23 +2,34 @@
 
 A paper evaluation is a grid of ``(algorithm x unreliable-link scheme x
 hyperparameter point x seed)`` cells. The executor walks only the *algorithm
-x scheme* axes in Python — distinct algorithms / schemes carry distinct
-``algo_state`` / ``link_state`` pytree structures and aggregation code, so
-they are necessarily separate compiles — and collapses EVERY other swept axis
-inside one compiled program per cell
-(``repro.experiments.sweep.make_batched_run_rounds``): the hyperparameter
-axes (``lrs x gammas x alphas x sigma0s x deltas``) are flattened with the
-seed axis into a single leading batch dimension.
+family x scheme* axes in Python — distinct families / schemes carry distinct
+``algo_state`` / ``link_state`` pytree shapes and branch tables, so they are
+necessarily separate compiles — and collapses EVERY other swept axis inside
+one compiled program per family cell
+(``repro.experiments.sweep.make_batched_run_rounds``): the *algorithm* axis
+(a traced per-trajectory ``algo_id`` into an ``AlgorithmSpec`` table) and the
+hyperparameter axes (``lrs x gammas x alphas x sigma0s x deltas``) are
+flattened with the seed axis into a single leading batch dimension.
 
-Nothing swept is a compile-time constant: lr and gamma/period are traced
-scalars consumed by factories inside the trace, sigma0/delta (and alpha's
-effect on connectivity) only shape the traced per-trajectory ``p_base``
-input, alpha's Dirichlet re-partition travels as the traced ``ds_state``
-index table, and the dataset arrays themselves are traced ``shared`` inputs.
-Compiled runners are memoized in a module-level cache whose key is therefore
-*structure-only* — e.g. the fig-8 alpha/gamma/delta/sigma0 ablations and an
-LR search all reuse ONE compile per (algorithm, scheme)
-(``tests/test_traced_axes.py`` counts the compiles).
+Algorithms batch together when they are *state-compatible* —
+``repro.core.algo_family`` groups them by the set of unified-state fields
+they materialize, e.g. fedavg / fedavg_all / fedavg_known_p / fedpbc all
+carry an empty state and run as ONE program; a mixed grid (say fedpbc +
+fedau) falls back to one program per family. The runner cache is keyed by
+the family (state structure), never by an individual algorithm name, so
+sweeping any subset of a family reuses one compile.
+
+Nothing swept is a compile-time constant: the algorithm is a traced index,
+lr and gamma/period are traced scalars consumed by factories inside the
+trace, sigma0/delta (and alpha's effect on connectivity) only shape the
+traced per-trajectory ``p_base`` input, alpha's Dirichlet re-partition
+travels as the traced ``ds_state`` index table, and the dataset arrays
+themselves are traced ``shared`` inputs. Compiled runners are memoized in a
+module-level cache whose key is therefore *structure-only* — e.g. the fig-8
+alpha/gamma/delta/sigma0 ablations, an LR search, and a FedPBC-vs-baselines
+comparison all reuse ONE compile per (family, scheme)
+(``tests/test_traced_axes.py`` / ``tests/test_algo_axis.py`` count the
+compiles).
 """
 from __future__ import annotations
 
@@ -32,7 +43,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import FederationConfig
-from repro.core.algorithms import ALGORITHMS, make_algorithm
+from repro.core.algorithms import (
+    ALGORITHMS,
+    algo_family,
+    make_algorithm,
+    make_algorithm_spec,
+)
 from repro.core.connectivity import build_base_probs, make_link_process
 from repro.experiments.results import ResultsStore, summarize
 from repro.experiments.shard import (
@@ -41,6 +57,7 @@ from repro.experiments.shard import (
     resolve_batch_mesh,
     shard_batch,
 )
+from repro.sharding.specs import replicated_sharding
 from repro.experiments.sweep import (
     CellBatch,
     eval_rounds,
@@ -81,8 +98,15 @@ class SweepSpec:
     give the default hyperparameter point; the plural axes (``lrs``,
     ``gammas``, ``alphas``, ``sigma0s``, ``deltas``) override them with a
     swept list whose cartesian product is flattened — together with ``seeds``
-    — into the one batch axis of the compiled cell program. An empty axis
+    (and, within a state-compatible family, ``algorithms``) — into the one
+    batch axis of the compiled cell program. An empty hyperparameter axis
     means "use the scalar field".
+
+    Specs are validated at construction: empty ``algorithms``/``schemes``/
+    ``seeds`` axes, duplicate entries on any of them, and unknown
+    algorithm/scheme names all raise an immediate ``ValueError`` naming the
+    offending field, instead of failing deep inside tracing (or silently
+    double-counting a row in every mean/CI).
     """
 
     algorithms: Tuple[str, ...] = ("fedpbc", "fedavg")
@@ -117,6 +141,29 @@ class SweepSpec:
     # extra FederationConfig field overrides, applied last (e.g.
     # (("fedau_K", 100), ("period", 20)))
     fed_overrides: Tuple[Tuple[str, Any], ...] = ()
+
+    def __post_init__(self):
+        for axis in ("algorithms", "schemes", "seeds"):
+            vals = getattr(self, axis)
+            if not vals:
+                raise ValueError(f"SweepSpec.{axis} is empty; give at least "
+                                 f"one entry")
+            if len(set(vals)) != len(vals):
+                dupes = sorted({v for v in vals if vals.count(v) > 1})
+                raise ValueError(
+                    f"SweepSpec.{axis} contains duplicates {dupes}: each "
+                    f"entry is one independent grid coordinate (duplicates "
+                    f"would silently double-count rows and every mean/CI)")
+        unknown = [a for a in self.algorithms if a not in ALGORITHMS]
+        if unknown:
+            raise ValueError(
+                f"SweepSpec.algorithms contains unknown algorithms "
+                f"{unknown}; available: {sorted(ALGORITHMS)}")
+        unknown = [s for s in self.schemes if s not in SCHEMES]
+        if unknown:
+            raise ValueError(
+                f"SweepSpec.schemes contains unknown schemes {unknown}; "
+                f"available: {sorted(SCHEMES)}")
 
     def hparam_points(self) -> List[Dict[str, float]]:
         """The flattened hyperparameter grid: one dict per point, in
@@ -235,17 +282,22 @@ def _runner_for(spec: SweepSpec, fed: FederationConfig, task,
                 metric_keys) -> Any:
     # Everything swept reaches the compiled program through traced inputs —
     # zero the hyperparameter knobs so cells differing only in them share one
-    # compiled runner. The runner's closures keep a reference to `fed`, but
-    # consume only its structural fields (scheme, local_steps, num_clients,
-    # algorithm knobs): gamma/period go through traced hparams, and
-    # alpha/sigma0/delta never leave the host (they shape p_base / the
-    # partition, both batch inputs).
+    # compiled runner, and canonicalize the algorithm name to its
+    # state-compatible family so the cache is keyed by state STRUCTURE, not
+    # by which member happens to run: every runner is built over the FULL
+    # family table (the traced algo_id selects the member), so fedpbc and
+    # fedavg cells hand back the same object. The runner's closures keep a
+    # reference to `fed`, but consume only its structural fields (scheme,
+    # local_steps, num_clients, per-family static knobs like fedau_K):
+    # gamma/period go through traced hparams, and alpha/sigma0/delta never
+    # leave the host (they shape p_base / the partition, both batch inputs).
+    family = algo_family(fed.algorithm)
     canon = dataclasses.replace(fed, alpha=0.0, sigma0=0.0, delta=0.0,
-                                gamma=0.0, period=0)
+                                gamma=0.0, period=0, algorithm=family[0])
     key = (_task_key(spec), canon, spec.rounds, spec.eval_every,
            tuple(metric_keys))
     if key not in _RUNNER_CACHE:
-        algo = make_algorithm(fed)
+        algo = make_algorithm_spec(family, fed)
         _RUNNER_CACHE[key] = make_batched_run_rounds(
             task.loss_fn, algo, fed,
             optimizer_factory=lambda hp: sgd(paper_decay(hp["lr"])),
@@ -322,16 +374,22 @@ def _batch_parts(spec: SweepSpec) -> tuple:
     return _BATCH_CACHE[key]
 
 
-_SHARDED_BATCH_CACHE: Dict[tuple, tuple] = {}
+# {(batch_key, mesh): {"shared": replicated dataset, "groups": {algos:
+# (sharded_batch, b_real)}}} — one base entry (the most recent (spec, mesh))
+# whose ONE committed dataset copy is reused by every algorithm-group
+# sub-entry, so a mixed-family sweep alternating groups per scheme neither
+# thrashes the committed arrays nor pins one replicated dataset per family
+_SHARDED_BATCH_CACHE: Dict[tuple, Dict[str, Any]] = {}
 
 
 def _sharded_cell_batch(spec: SweepSpec, fed: FederationConfig,
-                        task: TracedClassificationTask, mesh) -> tuple:
+                        task: TracedClassificationTask, mesh,
+                        algos: Tuple[str, ...]) -> tuple:
     """``make_cell_batch`` padded to the mesh's device count and committed to
     it, memoized like ``_batch_parts``: one device transfer of the heavy
     fields (key/p_base/partition arrays, the replicated dataset — on real
     multi-host backends, real H2D traffic) per (dataset, seeds, points,
-    mesh). ``fed`` is deliberately NOT in the cache key: only the tiny
+    algos, mesh). ``fed`` is deliberately NOT in the cache key: only the tiny
     ``[B_padded]`` ``period`` hparam vector depends on it, so it is rebuilt
     and committed per call — cells (or whole sweeps) differing only in a
     ``period`` override reuse the cached heavy arrays instead of pinning a
@@ -340,69 +398,98 @@ def _sharded_cell_batch(spec: SweepSpec, fed: FederationConfig,
     still hits.
 
     Unlike the host-side caches, this one holds DEVICE memory (a replicated
-    dataset copy per device), so it keeps only the most recent entry: a
-    sweep iterates cells of one (spec, mesh) and gets full reuse, while a
-    long-lived process hopping specs/meshes never accumulates committed
-    duplicates."""
-    key = _batch_key(spec) + (mesh,)
-    if key not in _SHARDED_BATCH_CACHE:
-        batch = make_cell_batch(spec, fed, task)
-        padded, b_real = pad_batch(batch, mesh.devices.size)
+    dataset copy per device), so it keeps only the most recent (spec, mesh)
+    base entry — with one sub-entry per algorithm group, since a
+    mixed-family sweep alternates groups within one sweep (evicting per
+    group would re-commit the heavy arrays once per (scheme, family)). The
+    replicated dataset is committed ONCE at the base and shared by every
+    group sub-entry (``shard_batch``'s device_put is a no-op on an array
+    already carrying the target sharding), so a many-family sweep pins one
+    dataset copy per device, not one per family. A long-lived process
+    hopping specs/meshes still never accumulates committed duplicates
+    beyond one sweep's groups."""
+    base = _batch_key(spec) + (mesh,)
+    entry = _SHARDED_BATCH_CACHE.get(base)
+    if entry is None:
         _SHARDED_BATCH_CACHE.clear()
-        _SHARDED_BATCH_CACHE[key] = (shard_batch(padded, mesh), b_real)
-    sharded, b_real = _SHARDED_BATCH_CACHE[key]
+        entry = _SHARDED_BATCH_CACHE.setdefault(
+            base, {"shared": None, "groups": {}})
+    if algos not in entry["groups"]:
+        batch = make_cell_batch(spec, fed, task, algos=algos)
+        if entry["shared"] is None:
+            entry["shared"] = jax.tree.map(
+                lambda x: jax.device_put(x, replicated_sharding(mesh)),
+                batch.shared)
+        batch = dataclasses.replace(batch, shared=entry["shared"])
+        padded, b_real = pad_batch(batch, mesh.devices.size)
+        entry["groups"][algos] = (shard_batch(padded, mesh), b_real)
+    sharded, b_real = entry["groups"][algos]
     lr = sharded.hparams["lr"]
     period = jax.device_put(
         jnp.full(lr.shape, float(fed.period), jnp.float32), lr.sharding)
     return CellBatch(keys=sharded.keys, p_base=sharded.p_base,
                      hparams=dict(sharded.hparams, period=period),
-                     data=sharded.data, shared=sharded.shared), b_real
+                     data=sharded.data, shared=sharded.shared,
+                     algo_id=sharded.algo_id), b_real
 
 
 def make_cell_batch(spec: SweepSpec, fed: FederationConfig,
-                    task: TracedClassificationTask) -> CellBatch:
-    """Flatten (hyperparameter point x seed) into one [B]-leading batch,
-    point-major: ``b = point_index * len(seeds) + seed_index``."""
+                    task: TracedClassificationTask,
+                    algos: Optional[Tuple[str, ...]] = None) -> CellBatch:
+    """Flatten (algorithm x hyperparameter point x seed) into one
+    [B]-leading batch, algo-major then point-major:
+    ``b = (algo_index * n_points + point_index) * len(seeds) + seed_index``.
+
+    ``algos`` (default: just ``fed.algorithm``) must all belong to one
+    state-compatible family; the batch's ``algo_id`` column carries each
+    trajectory's index into that family's canonical ``AlgorithmSpec`` table,
+    so the same compiled family runner serves any subset."""
+    if algos is None:
+        algos = (fed.algorithm,)
+    family = algo_family(algos[0])
+    bad = [a for a in algos if a not in family]
+    if bad:
+        raise ValueError(
+            f"algorithms {bad} are not state-compatible with {algos[0]!r} "
+            f"(family {family}); run them as separate cells")
+    ids = [family.index(a) for a in algos]
     keys, p_base, lr, gamma, idx = _batch_parts(spec)
+    if len(algos) > 1:
+        rep = lambda x: jnp.concatenate([x] * len(algos))
+        keys = jax.tree.map(rep, keys)
+        p_base, lr, gamma, idx = rep(p_base), rep(lr), rep(gamma), rep(idx)
     hparams = {
         "lr": lr,
         "gamma": gamma,
         "period": jnp.full((lr.shape[0],), float(fed.period), jnp.float32),
     }
+    block = lr.shape[0] // len(algos)
+    algo_id = jnp.asarray(np.repeat(ids, block), jnp.int32)
     return CellBatch(keys=keys, p_base=p_base, hparams=hparams,
-                     data={"idx": idx}, shared=task.shared)
+                     data={"idx": idx}, shared=task.shared, algo_id=algo_id)
 
 
-def run_cell_batch(spec: SweepSpec, algo: str, scheme: str, *,
-                   metric_keys=("loss", "num_active"),
-                   mesh=AUTO, devices=None) -> List[CellResult]:
-    """Run one (algo, scheme) cell: ALL hyperparameter points x seeds in one
-    batched program; returns one ``CellResult`` per point.
-
-    ``mesh``/``devices`` pick the execution placement (see
-    ``repro.experiments.shard.resolve_batch_mesh``): by default the batch
-    axis is sharded over a ``("batch",)`` mesh of all visible devices when
-    more than one is up (B padded to a device multiple, padding dropped on
-    the host), and runs on one device otherwise; ``mesh=None`` forces the
-    single-device path, an explicit ``devices`` list or ``Mesh`` pins the
-    placement. Per-trajectory results are identical either way, and both
-    paths share the same cached runner (the compiled executables differ, the
-    traced program does not).
-    """
+def _run_batch(spec: SweepSpec, algos: Tuple[str, ...], scheme: str, *,
+               metric_keys=("loss", "num_active"),
+               mesh=AUTO, devices=None) -> List[CellResult]:
+    """Run one (state-compatible algorithm group, scheme) cell: ALL algos x
+    hyperparameter points x seeds in one batched program; returns
+    ``CellResult`` rows algo-major, point-major."""
     task = get_traced_task(spec)
-    fed = spec.cell_config(algo, scheme)
+    fed = spec.cell_config(algos[0], scheme)
     runner = _runner_for(spec, fed, task, metric_keys)
     batch_mesh = resolve_batch_mesh(mesh, devices)
     if batch_mesh is not None:
         # memoized pad + device_put (shard.run_sharded is the uncached
         # one-shot equivalent); padding rows are sliced off right here, so
         # nothing downstream ever sees them
-        sharded, b_real = _sharded_cell_batch(spec, fed, task, batch_mesh)
+        sharded, b_real = _sharded_cell_batch(spec, fed, task, batch_mesh,
+                                              algos)
         states, out = runner(sharded)
         if sharded.batch_size != b_real:
             states, out = jax.tree.map(lambda x: x[:b_real], (states, out))
     else:
-        states, out = runner(make_cell_batch(spec, fed, task))
+        states, out = runner(make_cell_batch(spec, fed, task, algos=algos))
 
     points = spec.hparam_points()
     S = len(spec.seeds)
@@ -416,20 +503,46 @@ def run_cell_batch(spec: SweepSpec, algo: str, scheme: str, *,
     train_acc = np.asarray(jax.vmap(task.eval_train, in_axes=(0, None))(
         states.server, task.shared))
     mets = {k: np.asarray(v) for k, v in out["metrics"].items()}
+    B = len(algos) * len(points) * S
 
-    def rows(a, pi):
-        return a[pi * S:(pi + 1) * S]
+    def rows(a, ai, pi):
+        lo = (ai * len(points) + pi) * S
+        return a[lo:lo + S]
 
     return [
         CellResult(
             algo=algo, scheme=scheme, seeds=tuple(spec.seeds),
             rounds=spec.rounds, eval_rounds=rounds_at,
-            test_acc=rows(test_acc, pi), train_acc=rows(train_acc, pi),
-            loss=rows(mets.get("loss", np.zeros((len(points) * S, 0))), pi),
-            num_active=rows(
-                mets.get("num_active", np.zeros((len(points) * S, 0))), pi),
+            test_acc=rows(test_acc, ai, pi),
+            train_acc=rows(train_acc, ai, pi),
+            loss=rows(mets.get("loss", np.zeros((B, 0))), ai, pi),
+            num_active=rows(mets.get("num_active", np.zeros((B, 0))), ai, pi),
             hparams=dict(pt))
+        for ai, algo in enumerate(algos)
         for pi, pt in enumerate(points)]
+
+
+def run_cell_batch(spec: SweepSpec, algo: str, scheme: str, *,
+                   metric_keys=("loss", "num_active"),
+                   mesh=AUTO, devices=None) -> List[CellResult]:
+    """Run one (algo, scheme) cell: ALL hyperparameter points x seeds in one
+    batched program; returns one ``CellResult`` per point. (The program is
+    the algorithm's shared FAMILY runner with a constant ``algo_id`` column —
+    ``run_sweep`` additionally joins whole state-compatible groups into one
+    dispatch.)
+
+    ``mesh``/``devices`` pick the execution placement (see
+    ``repro.experiments.shard.resolve_batch_mesh``): by default the batch
+    axis is sharded over a ``("batch",)`` mesh of all visible devices when
+    more than one is up (B padded to a device multiple, padding dropped on
+    the host), and runs on one device otherwise; ``mesh=None`` forces the
+    single-device path, an explicit ``devices`` list or ``Mesh`` pins the
+    placement. Per-trajectory results are identical either way, and both
+    paths share the same cached runner (the compiled executables differ, the
+    traced program does not).
+    """
+    return _run_batch(spec, (algo,), scheme, metric_keys=metric_keys,
+                      mesh=mesh, devices=devices)
 
 
 def run_cell(spec: SweepSpec, algo: str, scheme: str, *,
@@ -450,7 +563,15 @@ def run_sweep(spec: SweepSpec, *, store: Optional[ResultsStore] = None,
               metric_keys=("loss", "num_active"),
               mesh=AUTO, devices=None) -> List[CellResult]:
     """Execute the full grid; optionally append every (cell, hyperparameter
-    point) row to ``store`` with its coordinates recorded."""
+    point) row to ``store`` with its coordinates recorded (the ``algo``
+    field is each row's algorithm-axis coordinate).
+
+    Within each scheme, algorithms are grouped into state-compatible
+    families (``repro.core.algo_family``) and every group runs as ONE
+    batched program over the joint (algo x point x seed) axis; a mixed-state
+    grid simply falls back to one program per family. Results (and store
+    rows) keep the historical ``scheme -> algorithm -> point`` order
+    regardless of how the groups executed."""
     # validate every cell upfront — a typo in the last algorithm must not
     # surface as a KeyError after earlier cells ran for minutes
     for scheme in spec.schemes:
@@ -458,10 +579,15 @@ def run_sweep(spec: SweepSpec, *, store: Optional[ResultsStore] = None,
             spec.cell_config(algo, scheme)
     cells = []
     for scheme in spec.schemes:
-        for algo in spec.algorithms:
-            for cell in run_cell_batch(spec, algo, scheme,
-                                       metric_keys=metric_keys,
-                                       mesh=mesh, devices=devices):
+        groups: Dict[Tuple[str, ...], List[str]] = {}
+        for algo in dict.fromkeys(spec.algorithms):   # unique, in order
+            groups.setdefault(algo_family(algo), []).append(algo)
+        by_algo: Dict[str, List[CellResult]] = {}
+        n_points = len(spec.hparam_points())
+        pending = list(spec.algorithms)     # emission order (per occurrence)
+
+        def emit(algo):
+            for cell in by_algo[algo]:
                 cells.append(cell)
                 if store is not None:
                     store.append(
@@ -476,4 +602,27 @@ def run_sweep(spec: SweepSpec, *, store: Optional[ResultsStore] = None,
                                 "train_acc": cell.train_acc,
                                 "loss": cell.loss,
                                 "num_active": cell.num_active})
+
+        # groups run in first-appearance order; completed results are emitted
+        # (and PERSISTED) as soon as spec order allows, so a crash in a later
+        # family (e.g. mifa's [m, ...] memory OOMing) never discards rows an
+        # earlier family already computed
+        try:
+            for group in groups.values():
+                results = _run_batch(spec, tuple(group), scheme,
+                                     metric_keys=metric_keys,
+                                     mesh=mesh, devices=devices)
+                for ai, algo in enumerate(group):
+                    by_algo[algo] = results[ai * n_points:(ai + 1) * n_points]
+                while pending and pending[0] in by_algo:
+                    emit(pending.pop(0))
+        finally:
+            # no-op on success (pending drained); on a crash, salvage every
+            # result a completed group already computed — including ones the
+            # spec-order gate was still holding back behind the crashed
+            # family (e.g. ("fedpbc", "fedau", "fedavg") with fedau failing:
+            # fedavg ran with fedpbc and must persist too)
+            for algo in pending:
+                if algo in by_algo:
+                    emit(algo)
     return cells

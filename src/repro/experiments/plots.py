@@ -108,7 +108,11 @@ def export_curves(store: ResultsStore, out_dir: str,
     The store is append-only, so a re-run of the same cell appends a second
     record with the same ``cell_key``: only the LATEST record per cell is
     used (re-runs supersede), while records of different seed batches pool
-    along the seed axis (per-seed dedup, later records win on overlap)."""
+    along the seed axis (per-seed dedup, later records win on overlap).
+
+    A store with NO records matching ``filters`` raises ``ValueError`` (an
+    empty/missing store or an over-narrow filter is a caller mistake — a
+    silent zero-file export would just move the confusion downstream)."""
     import sys
 
     # latest record per cell over ALL records — a later arrays-less record
@@ -117,6 +121,11 @@ def export_curves(store: ResultsStore, out_dir: str,
     latest: Dict[tuple, Dict[str, Any]] = {}
     for rec in store.records(**filters):
         latest[cell_key(rec)] = rec     # later append wins
+    if not latest:
+        what = (f"matching filters {filters}" if filters
+                else "(empty or missing store)")
+        raise ValueError(
+            f"no records to export from {store.path} {what}")
     groups: Dict[tuple, List[Dict[str, Any]]] = {}
     for rec in latest.values():
         if not rec.get("arrays"):

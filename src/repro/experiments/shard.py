@@ -1,16 +1,17 @@
 """Multi-device execution of the batched sweep runner.
 
-``make_batched_run_rounds`` runs all B = points x seeds trajectories of one
-(algorithm, scheme) cell as one compiled program over a leading batch axis.
+``make_batched_run_rounds`` runs all B = algos x points x seeds trajectories
+of one (algorithm-family, scheme) cell as one compiled program over a leading
+batch axis.
 Trajectories never exchange data — every reduction in the program is within a
 single trajectory — so that axis is embarrassingly parallel and this module
 splits it across devices with GSPMD:
 
 - a 1-D ``("batch",)`` :class:`~jax.sharding.Mesh` over the participating
   devices (``repro.launch.mesh.make_batch_mesh``);
-- ``CellBatch.keys / p_base / hparams / data`` placed with their leading
-  axis sharded over ``"batch"`` and ``shared`` (the dataset) replicated,
-  one full copy per device (``repro.sharding.specs``);
+- ``CellBatch.keys / p_base / hparams / data / algo_id`` placed with their
+  leading axis sharded over ``"batch"`` and ``shared`` (the dataset)
+  replicated, one full copy per device (``repro.sharding.specs``);
 - B padded up to a multiple of the device count by repeating the last real
   trajectory. Padding rows are full, finite simulations (never NaN inputs
   that could poison a compiler-introduced collective); their results are
@@ -81,10 +82,11 @@ def pad_batch(batch: CellBatch, multiple: int) -> tuple:
     def _pad(x):
         return jnp.concatenate([x, jnp.repeat(x[-1:], pad, axis=0)])
 
-    keys, p_base, hparams, data = jax.tree.map(
-        _pad, (batch.keys, batch.p_base, batch.hparams, batch.data))
+    keys, p_base, hparams, data, algo_id = jax.tree.map(
+        _pad, (batch.keys, batch.p_base, batch.hparams, batch.data,
+               batch.algo_id))
     return CellBatch(keys=keys, p_base=p_base, hparams=hparams, data=data,
-                     shared=batch.shared), B
+                     shared=batch.shared, algo_id=algo_id), B
 
 
 def shard_batch(batch: CellBatch, mesh: Mesh) -> CellBatch:
@@ -98,12 +100,12 @@ def shard_batch(batch: CellBatch, mesh: Mesh) -> CellBatch:
             f"{n} devices; pad_batch first")
     split = leading_axis_sharding(mesh)
     repl = replicated_sharding(mesh)
-    keys, p_base, hparams, data = jax.tree.map(
+    keys, p_base, hparams, data, algo_id = jax.tree.map(
         lambda x: jax.device_put(x, split),
-        (batch.keys, batch.p_base, batch.hparams, batch.data))
+        (batch.keys, batch.p_base, batch.hparams, batch.data, batch.algo_id))
     shared = jax.tree.map(lambda x: jax.device_put(x, repl), batch.shared)
     return CellBatch(keys=keys, p_base=p_base, hparams=hparams, data=data,
-                     shared=shared)
+                     shared=shared, algo_id=algo_id)
 
 
 def run_sharded(runner, batch: CellBatch, mesh: Mesh):

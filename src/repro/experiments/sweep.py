@@ -21,11 +21,20 @@ traced input*, carried by a ``CellBatch``:
 - ``data``     per-trajectory ``ds_state`` (e.g. the Dirichlet(alpha)
   partition ``idx [B, m, per_client]``);
 - ``shared``   the unbatched dataset arrays, traced but vmapped with
-  ``in_axes=None`` so B trajectories share one device copy.
+  ``in_axes=None`` so B trajectories share one device copy;
+- ``algo_id``  per-trajectory algorithm index ``[B]`` into an
+  ``AlgorithmSpec`` family table — the *algorithm axis*. When the runner is
+  built from a spec (``repro.core.AlgorithmSpec``), client-start/aggregate
+  lower to a branchless ``lax.switch``/select over the family's branch table,
+  so every state-compatible algorithm (e.g. the whole
+  fedavg/fedavg_all/fedavg_known_p/fedpbc family) shares ONE compiled program
+  and the algorithm axis flattens into the batch dimension alongside points
+  and seeds.
 
-Only *structural* knobs still recompile: the algorithm / scheme pair (distinct
-``algo_state``/``link_state`` pytrees and aggregation code), round counts, and
-array shapes (num_clients, per_client, model dims, batch size).
+Only *structural* knobs still recompile: the (algorithm family, scheme) pair
+(distinct ``algo_state``/``link_state`` pytree shapes and branch tables),
+round counts, and array shapes (num_clients, per_client, model dims, batch
+size).
 
 ``make_vmap_run_rounds`` — the PR-2 seed-axis API — is a thin wrapper that
 runs a single-point batch with constant data/optimizer; migrated suites and
@@ -47,7 +56,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import FederationConfig
-from repro.core.algorithms import Algorithm
+from repro.core.algorithms import Algorithm, AlgorithmSpec, as_algorithm
 from repro.core.federated import (
     DEFAULT_METRIC_KEYS,
     init_fed_state,
@@ -79,12 +88,16 @@ def stack_seed_keys(seeds):
 
 @dataclass
 class CellBatch:
-    """Everything one (algorithm, scheme) cell's compiled program consumes.
+    """Everything one (algorithm-family, scheme) cell's compiled program
+    consumes.
 
-    All fields are pytrees; ``keys``/``p_base``/``hparams``/``data`` carry a
-    leading ``[B]`` batch axis (B = points x seeds), ``shared`` is unbatched
-    (one device copy serves every trajectory). Registered as a pytree so a
-    batch can be sliced/saved/donated like any other JAX value.
+    All fields are pytrees; ``keys``/``p_base``/``hparams``/``data``/
+    ``algo_id`` carry a leading ``[B]`` batch axis (B = algos x points x
+    seeds), ``shared`` is unbatched (one device copy serves every
+    trajectory). ``algo_id`` is the traced per-trajectory index into the
+    runner's ``AlgorithmSpec`` table; the default ``()`` (no algorithm axis)
+    keeps the historical single-algorithm program. Registered as a pytree so
+    a batch can be sliced/saved/donated like any other JAX value.
     """
 
     keys: Pytree        # seed-key bundles, leaves [B, 2]
@@ -92,6 +105,7 @@ class CellBatch:
     hparams: Pytree     # dict of [B] traced scalars (lr, gamma, period, ...)
     data: Pytree        # per-trajectory ds_state (leaves [B, ...])
     shared: Pytree      # unbatched dataset arrays
+    algo_id: Pytree = ()  # [B] int32 AlgorithmSpec indices, or () (no axis)
 
     @property
     def batch_size(self) -> int:
@@ -100,12 +114,12 @@ class CellBatch:
 
 jax.tree_util.register_dataclass(
     CellBatch,
-    data_fields=["keys", "p_base", "hparams", "data", "shared"],
+    data_fields=["keys", "p_base", "hparams", "data", "shared", "algo_id"],
     meta_fields=[],
 )
 
 
-def make_batched_run_rounds(loss_fn: Callable, algorithm: Algorithm,
+def make_batched_run_rounds(loss_fn: Callable, algorithm,
                             fed_cfg: FederationConfig, *,
                             optimizer_factory: Callable,
                             link_factory: Callable,
@@ -118,6 +132,12 @@ def make_batched_run_rounds(loss_fn: Callable, algorithm: Algorithm,
     """Build the jitted B-trajectory runner for one grid cell.
 
     Args:
+      algorithm: an ``Algorithm`` (single rule, static dispatch — the
+        historical program), or an ``AlgorithmSpec`` family table. With a
+        spec, the batch's traced per-trajectory ``algo_id`` selects each
+        trajectory's rule through the family's branchless switch, so one
+        compiled program serves every member; a batch without an algorithm
+        axis (``algo_id=()``) binds the spec's first entry statically.
       optimizer_factory: ``hparams -> Optimizer`` (e.g.
         ``lambda hp: sgd(paper_decay(hp["lr"]))``); called on the traced
         per-trajectory hparam scalars inside the trace, so swept LRs share one
@@ -158,20 +178,30 @@ def make_batched_run_rounds(loss_fn: Callable, algorithm: Algorithm,
     do_eval = eval_fn is not None and eval_every > 0
     n_chunks, rem = divmod(num_rounds, eval_every) if do_eval else (0, num_rounds)
 
-    def init_point(keys, p_base, hparams, data, shared):
+    def _bound(algo_id):
+        """Resolve the per-trajectory dispatch: a traced ``algo_id`` scalar
+        selects through the spec's switch; an absent axis (the empty-pytree
+        default) is the historical static program."""
+        if isinstance(algo_id, tuple) and algo_id == ():
+            algo_id = 0
+        return as_algorithm(algorithm, algo_id)
+
+    def init_point(keys, p_base, hparams, data, shared, algo_id):
+        algo = _bound(algo_id)
         optimizer = optimizer_factory(hparams)
         link = link_factory(p_base, hparams)
         source = source_factory(shared)
         params = init_params(keys["params"])
-        st = init_fed_state(keys["state"], params, fed_cfg, algorithm, link,
+        st = init_fed_state(keys["state"], params, fed_cfg, algo, link,
                             optimizer)
         return st, source.init(keys["ds"], data)
 
-    def scan_point(st, ds, data_key, p_base, hparams, shared):
+    def scan_point(st, ds, data_key, p_base, hparams, shared, algo_id):
+        algo = _bound(algo_id)
         optimizer = optimizer_factory(hparams)
         link = link_factory(p_base, hparams)
         source = source_factory(shared)
-        round_fn = make_round_fn(loss_fn, optimizer, algorithm, link, fed_cfg)
+        round_fn = make_round_fn(loss_fn, optimizer, algo, link, fed_cfg)
         step = make_round_step(round_fn, source)
 
         def body(carry, _):
@@ -206,14 +236,15 @@ def make_batched_run_rounds(loss_fn: Callable, algorithm: Algorithm,
         st, ds = carry
         return st, {"metrics": mets, "evals": evals}
 
-    init_batch = jax.jit(jax.vmap(init_point, in_axes=(0, 0, 0, 0, None)))
-    scan_batch = jax.jit(jax.vmap(scan_point, in_axes=(0, 0, 0, 0, 0, None)))
+    init_batch = jax.jit(jax.vmap(init_point, in_axes=(0, 0, 0, 0, None, 0)))
+    scan_batch = jax.jit(jax.vmap(scan_point,
+                                  in_axes=(0, 0, 0, 0, 0, None, 0)))
 
     def run(batch: CellBatch):
         st, ds = init_batch(batch.keys, batch.p_base, batch.hparams,
-                            batch.data, batch.shared)
+                            batch.data, batch.shared, batch.algo_id)
         return scan_batch(st, ds, batch.keys["data"], batch.p_base,
-                          batch.hparams, batch.shared)
+                          batch.hparams, batch.shared, batch.algo_id)
 
     run.init_batch = init_batch
     run.scan_batch = scan_batch
@@ -294,8 +325,10 @@ def main(argv=None) -> None:
         description="Run a (algorithm x scheme x hyperparameter x seed) sweep "
                     "on the batched engine and append results to a JSONL/npz "
                     "store. Each --lrs/--gammas/--alphas/--sigma0s/--deltas "
-                    "axis is swept inside ONE compiled program per "
-                    "(algorithm, scheme).")
+                    "axis — and every state-compatible group of --algos "
+                    "(e.g. fedpbc,fedavg,fedavg_all,fedavg_known_p) — is "
+                    "swept inside ONE compiled program per "
+                    "(algorithm family, scheme).")
     ap.add_argument("--algos", default="fedpbc,fedavg",
                     help=f"comma list from {','.join(ALGOS)}")
     ap.add_argument("--schemes", default="bernoulli_ti",

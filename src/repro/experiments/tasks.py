@@ -114,6 +114,20 @@ def make_classification_task(*, data_seed=0, num_clients=100, dim=32,
     )
 
 
+def with_label_noise(shared: Dict[str, Any], key, frac: float = 0.1,
+                     classes: int = None) -> Dict[str, Any]:
+    """Same-shape label-noise variant of a task's ``shared`` dataset: a
+    Bernoulli(``frac``) subset of the train labels is shifted to the next
+    class (cyclically). Because the dataset arrays are *traced* inputs of the
+    batched sweep runner, the variant rides an existing compiled program —
+    no new task, no new partition, no recompile (the ROADMAP "traced dataset
+    swaps" path; pinned by ``tests/test_traced_axes.py``)."""
+    y = shared["y"]
+    c = classes if classes is not None else int(y.max()) + 1
+    flip = jax.random.uniform(key, y.shape) < frac
+    return dict(shared, y=jnp.where(flip, (y + 1) % c, y))
+
+
 @dataclass(frozen=True)
 class TracedClassificationTask:
     """Alpha-free task bundle for the batched sweep core.

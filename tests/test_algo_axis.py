@@ -1,0 +1,329 @@
+"""The algorithm axis of the batched sweep engine.
+
+Acceptance guarantees of the AlgorithmSpec refactor:
+
+1. Batching a whole state-compatible algorithm family (fedpbc / fedavg /
+   fedavg_all / fedavg_known_p, all with empty ``AlgoState``) into ONE
+   compiled program via a traced per-trajectory ``algo_id`` changes NOTHING
+   per trajectory: every leaf equals the per-algorithm compiled path (a
+   statically-bound single-``Algorithm`` runner, the pre-refactor execution
+   model) bit for bit — on the single-device path and on a multi-device
+   ``("batch",)`` mesh (CI runs this file under
+   ``XLA_FLAGS=--xla_force_host_platform_device_count=8``).
+2. The executor's runner cache is keyed by the family's state structure, not
+   the algorithm name: cells differing only in the (family-compatible)
+   algorithm share one runner and ONE (init, scan) jit entry each — the CI
+   compile counter.
+3. Mixed-state grids fall back to one program per family with unchanged
+   result ordering.
+4. ``SweepSpec`` rejects empty axes, duplicate seeds, and unknown names at
+   construction with the offending field named.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import make_algorithm, make_link_process
+from repro.core.algorithms import AlgorithmSpec, algo_family, state_signature
+from repro.experiments import SweepSpec, ResultsStore, run_sweep
+from repro.experiments.grid import (
+    _RUNNER_CACHE,
+    _run_batch,
+    _runner_for,
+    get_traced_task,
+    make_cell_batch,
+    run_cell_batch,
+)
+from repro.experiments.shard import resolve_batch_mesh, run_sharded
+from repro.experiments.sweep import make_batched_run_rounds
+from repro.optim import paper_decay, sgd
+
+N_DEV = len(jax.devices())
+multi_device = pytest.mark.skipif(
+    N_DEV < 2,
+    reason="needs >1 device (XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+
+SEEDS = (0, 1)
+BASE = SweepSpec(seeds=SEEDS, num_clients=8, dim=16, hidden=16, classes=10,
+                 n_per_class=60, n_train=480, per_client=24,
+                 batch_size=4, local_steps=3, rounds=5, eval_every=2,
+                 lrs=(0.05, 0.1))
+METRIC_KEYS = ("loss", "num_active")
+FAMILY = algo_family("fedavg")
+
+
+def _assert_trees_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def _per_algorithm_reference(spec, algo, scheme):
+    """The pre-refactor per-algorithm compiled path: a runner built over ONE
+    statically-bound Algorithm (direct branch dispatch, no switch) running
+    this algorithm's own (point x seed) batch with no algorithm axis."""
+    task = get_traced_task(spec)
+    fed = spec.cell_config(algo, scheme)
+    runner = make_batched_run_rounds(
+        task.loss_fn, make_algorithm(fed), fed,
+        optimizer_factory=lambda hp: sgd(paper_decay(hp["lr"])),
+        link_factory=lambda p, hp: make_link_process(
+            p, fed, gamma=hp["gamma"], period=hp["period"]),
+        source_factory=task.source_factory,
+        init_params=task.init_params,
+        num_rounds=spec.rounds, eval_every=spec.eval_every,
+        eval_fn=task.eval_test, metric_keys=METRIC_KEYS)
+    batch = dataclasses.replace(
+        make_cell_batch(spec, fed, task), algo_id=())
+    return runner(batch)
+
+
+def test_family_is_the_paper_baseline_quartet():
+    assert FAMILY == ("fedpbc", "fedavg", "fedavg_all", "fedavg_known_p")
+    for name in FAMILY:
+        assert algo_family(name) == FAMILY
+        assert state_signature(name) == frozenset()
+    # singleton families: distinct state signatures never co-batch
+    assert algo_family("fedau") == ("fedau",)
+    assert algo_family("mifa") == ("mifa",)
+    assert algo_family("f3ast") == ("f3ast",)
+    assert algo_family("fedpbc_m") == ("fedpbc_m",)
+
+
+def test_family_batch_matches_per_algorithm_bit_for_bit():
+    """All 4 family members x 2 lrs x 2 seeds in ONE switch-based program vs
+    four per-algorithm statically-dispatched programs: states (including the
+    unified algo_state), per-round metrics, and in-scan evals must be
+    bitwise identical per trajectory."""
+    scheme = "bernoulli_tv"     # time-varying p_t exercises the known-p branch
+    task = get_traced_task(BASE)
+    fed = BASE.cell_config(FAMILY[0], scheme)
+    runner = _runner_for(BASE, fed, task, METRIC_KEYS)
+    batch = make_cell_batch(BASE, fed, task, algos=FAMILY)
+    P, S = len(BASE.hparam_points()), len(SEEDS)
+    assert batch.batch_size == len(FAMILY) * P * S
+    np.testing.assert_array_equal(
+        np.asarray(batch.algo_id), np.repeat(np.arange(4), P * S))
+    states, out = runner(batch)
+
+    for ai, algo in enumerate(FAMILY):
+        ref_states, ref_out = _per_algorithm_reference(BASE, algo, scheme)
+        rows = slice(ai * P * S, (ai + 1) * P * S)
+        _assert_trees_equal(jax.tree.map(lambda x: x[rows], states),
+                            ref_states)
+        _assert_trees_equal(jax.tree.map(lambda x: x[rows], out), ref_out)
+
+
+@multi_device
+def test_family_batch_sharded_bit_for_bit():
+    """The joint (algo x point x seed) axis shards over the ("batch",) mesh
+    like any other batch: switch-based aggregation under GSPMD partitioning
+    must equal the single-device family program bitwise."""
+    scheme = "bernoulli_tv"
+    task = get_traced_task(BASE)
+    fed = BASE.cell_config(FAMILY[0], scheme)
+    runner = _runner_for(BASE, fed, task, METRIC_KEYS)
+    batch = make_cell_batch(BASE, fed, task, algos=FAMILY)
+    mesh = resolve_batch_mesh()
+    ref = runner(batch)                          # single-device
+    sharded = run_sharded(runner, batch, mesh)   # padded + partitioned
+    _assert_trees_equal(sharded, ref)
+
+
+def test_runner_cache_keyed_by_family_not_algorithm_name():
+    """Cells differing only in a family-compatible algorithm share ONE
+    runner object and ONE compiled (init, scan) pair."""
+    spec = dataclasses.replace(BASE, rounds=4, eval_every=0)
+    task = get_traced_task(spec)
+    runners = {a: _runner_for(spec, spec.cell_config(a, "bernoulli_ti"),
+                              task, METRIC_KEYS) for a in FAMILY}
+    assert len({id(r) for r in runners.values()}) == 1
+    a = run_cell_batch(spec, "fedpbc", "bernoulli_ti",
+                       metric_keys=METRIC_KEYS, mesh=None)
+    b = run_cell_batch(spec, "fedavg", "bernoulli_ti",
+                       metric_keys=METRIC_KEYS, mesh=None)
+    # same compiled program served both (same batch shapes, different algo_id
+    # values — a traced input, not a compile knob)
+    runner = runners["fedpbc"]
+    if hasattr(runner.scan_batch, "_cache_size"):
+        assert runner.init_batch._cache_size() == 1
+        assert runner.scan_batch._cache_size() == 1
+    # and the trajectories genuinely differ by algorithm
+    assert not np.array_equal(a[0].test_acc, b[0].test_acc)
+
+
+def test_run_sweep_batches_family_into_one_program(tmp_path):
+    """A FedPBC-vs-baselines sweep (the paper's core comparison) executes as
+    ONE compiled program — the CI compile counter — while cells and store
+    rows keep the scheme -> algorithm -> point order with the algo
+    coordinate recorded."""
+    spec = dataclasses.replace(BASE, rounds=3, eval_every=3,
+                               algorithms=FAMILY,
+                               schemes=("bernoulli_ti",))
+    store = ResultsStore(str(tmp_path / "sweeps"))
+    cells = run_sweep(spec, store=store, suite="algo-axis",
+                      metric_keys=METRIC_KEYS)
+    P = len(spec.hparam_points())
+    assert [(c.algo, c.hparams["lr"]) for c in cells] == [
+        (a, lr) for a in FAMILY for lr in spec.lrs]
+    fed = spec.cell_config(FAMILY[0], "bernoulli_ti")
+    runner = _runner_for(spec, fed, get_traced_task(spec), METRIC_KEYS)
+    if hasattr(runner.scan_batch, "_cache_size"):
+        # the whole 4-algorithm family reused ONE jit cache entry per stage
+        assert runner.init_batch._cache_size() == 1
+        assert runner.scan_batch._cache_size() == 1
+    rows = store.records(suite="algo-axis")
+    assert [r["algo"] for r in rows] == [a for a in FAMILY for _ in range(P)]
+    for row, cell in zip(rows, cells):
+        np.testing.assert_array_equal(store.load_arrays(row)["test_acc"],
+                                      cell.test_acc)
+    # distinct algorithms produced distinct trajectories (the algo_id input
+    # is wired, not decorative)
+    finals = {c.algo: c.test_acc.tobytes() for c in cells if
+              c.hparams["lr"] == spec.lrs[0]}
+    assert len(set(finals.values())) == len(FAMILY)
+
+
+def test_mixed_state_grid_falls_back_per_family():
+    """fedpbc (empty state) + fedau (gap stats) cannot share a program: the
+    sweep falls back to one runner per family, with per-algorithm results
+    identical to their own single-cell runs — and the INTERLEAVED spec order
+    (fedpbc, fedau, fedavg) preserved even though fedpbc/fedavg executed
+    together as one group."""
+    spec = dataclasses.replace(BASE, rounds=3, eval_every=0, lrs=(),
+                               algorithms=("fedpbc", "fedau", "fedavg"),
+                               schemes=("bernoulli_ti",))
+    task = get_traced_task(spec)
+    r_pbc = _runner_for(spec, spec.cell_config("fedpbc", "bernoulli_ti"),
+                        task, METRIC_KEYS)
+    r_au = _runner_for(spec, spec.cell_config("fedau", "bernoulli_ti"),
+                       task, METRIC_KEYS)
+    assert r_pbc is not r_au
+    cells = run_sweep(spec, metric_keys=METRIC_KEYS)
+    assert [c.algo for c in cells] == ["fedpbc", "fedau", "fedavg"]
+    for cell in cells:
+        solo = run_cell_batch(spec, cell.algo, "bernoulli_ti",
+                              metric_keys=METRIC_KEYS)[0]
+        np.testing.assert_array_equal(cell.test_acc, solo.test_acc)
+        np.testing.assert_array_equal(cell.loss, solo.loss)
+
+
+def test_run_sweep_persists_completed_groups_before_later_failures(
+        tmp_path, monkeypatch):
+    """Store rows of an already-finished family group must survive a crash in
+    a later group (e.g. mifa's [m, ...] memory OOMing): persistence is
+    incremental per group — INCLUDING results the spec-order emission gate
+    was still holding back behind the crashed family (fedavg here ran
+    together with fedpbc but is spec-ordered after fedau)."""
+    import repro.experiments.grid as grid_mod
+
+    spec = dataclasses.replace(BASE, rounds=3, eval_every=0, lrs=(),
+                               algorithms=("fedpbc", "fedau", "fedavg"),
+                               schemes=("bernoulli_ti",))
+    real = grid_mod._run_batch
+
+    def failing(spec_, algos, scheme, **kw):
+        if "fedau" in algos:
+            raise RuntimeError("simulated OOM in fedau group")
+        return real(spec_, algos, scheme, **kw)
+
+    monkeypatch.setattr(grid_mod, "_run_batch", failing)
+    store = ResultsStore(str(tmp_path / "sweeps"))
+    with pytest.raises(RuntimeError, match="simulated OOM"):
+        run_sweep(spec, store=store, suite="crash", metric_keys=METRIC_KEYS)
+    assert [r["algo"] for r in store.records(suite="crash")] == [
+        "fedpbc", "fedavg"]
+
+
+def test_mixed_family_sweep_does_not_thrash_sharded_batch_cache():
+    """Alternating family groups across schemes must keep ONE committed copy
+    of the heavy batch arrays per group (sub-entries under one (spec, mesh)
+    base), not evict and re-commit each other once per (scheme, family)."""
+    from repro.experiments.grid import _SHARDED_BATCH_CACHE
+
+    spec = dataclasses.replace(BASE, rounds=3, eval_every=0, lrs=(),
+                               algorithms=("fedpbc", "fedau"),
+                               schemes=("bernoulli_ti", "bernoulli_tv"))
+    run_sweep(spec, metric_keys=METRIC_KEYS, devices=jax.devices()[:1])
+    assert len(_SHARDED_BATCH_CACHE) == 1            # one (spec, mesh) base
+    (entry,) = _SHARDED_BATCH_CACHE.values()
+    assert set(entry["groups"]) == {("fedpbc",), ("fedau",)}
+    # ONE committed dataset copy serves every group (device_put of an
+    # already-committed array is a no-op, so the sub-entries alias it)
+    for sharded, _ in entry["groups"].values():
+        for base_leaf, group_leaf in zip(jax.tree.leaves(entry["shared"]),
+                                         jax.tree.leaves(sharded.shared)):
+            assert group_leaf is base_leaf
+
+
+def test_unified_state_container_shapes():
+    """Unused AlgoState leaves are zero-sized; fields only some members of a
+    (hypothetical mixed) spec need are materialized for all of them."""
+    server = {"w": jnp.ones((3, 2)), "b": jnp.zeros(2)}
+    m = 5
+    empty = AlgorithmSpec(FAMILY).init(server, m)
+    assert empty.gap.shape == (0,) and empty.lam.shape == (0,)
+    assert jax.tree.leaves(empty.mem)[0].shape[0] == 0
+    assert jax.tree.leaves(empty.mom)[0].shape[0] == 0
+
+    au = AlgorithmSpec(("fedau",)).init(server, m)
+    assert au.gap.shape == au.sum_gaps.shape == au.n_gaps.shape == (m,)
+    assert au.lam.shape == (0,)
+
+    mi = AlgorithmSpec(("mifa",)).init(server, m)
+    assert {l.shape[:1] for l in jax.tree.leaves(mi.mem)} == {(m,)}
+
+    mixed = AlgorithmSpec(("fedavg", "fedau")).init(server, m)
+    assert mixed.gap.shape == (m,)      # masked (inert) for fedavg rows
+
+
+def test_algorithm_spec_validation_and_binding():
+    with pytest.raises(ValueError, match="non-empty"):
+        AlgorithmSpec(())
+    with pytest.raises(ValueError, match="unknown algorithms.*fedx"):
+        AlgorithmSpec(("fedpbc", "fedx"))
+    with pytest.raises(ValueError, match="duplicates"):
+        AlgorithmSpec(("fedpbc", "fedpbc"))
+    with pytest.raises(ValueError, match="unknown algorithm"):
+        state_signature("fedx")
+    spec = AlgorithmSpec(FAMILY)
+    assert spec.id_of("fedavg_all") == 2
+    with pytest.raises(ValueError, match="not in this spec's family"):
+        spec.id_of("mifa")
+    assert spec.bind(1).name == "fedavg"
+    assert spec.bind(3).needs_p            # fedavg_known_p
+    # mixing families in one batch is refused before anything compiles
+    task = get_traced_task(BASE)
+    fed = BASE.cell_config("fedpbc", "bernoulli_ti")
+    with pytest.raises(ValueError, match="state-compatible"):
+        make_cell_batch(BASE, fed, task, algos=("fedpbc", "mifa"))
+    with pytest.raises(ValueError, match="state-compatible"):
+        _run_batch(BASE, ("fedpbc", "fedau"), "bernoulli_ti",
+                   metric_keys=METRIC_KEYS)
+
+
+def test_sweep_spec_validation_names_offending_field():
+    with pytest.raises(ValueError, match="SweepSpec.algorithms is empty"):
+        dataclasses.replace(BASE, algorithms=())
+    with pytest.raises(ValueError, match="SweepSpec.schemes is empty"):
+        dataclasses.replace(BASE, schemes=())
+    with pytest.raises(ValueError, match="SweepSpec.seeds is empty"):
+        dataclasses.replace(BASE, seeds=())
+    with pytest.raises(ValueError, match=r"SweepSpec.seeds.*duplicate.*\[3\]"):
+        dataclasses.replace(BASE, seeds=(0, 3, 3))
+    with pytest.raises(ValueError,
+                       match="SweepSpec.algorithms.*duplicates.*fedpbc"):
+        dataclasses.replace(BASE, algorithms=("fedpbc", "fedavg", "fedpbc"))
+    with pytest.raises(ValueError,
+                       match="SweepSpec.schemes.*duplicates.*cyclic"):
+        dataclasses.replace(BASE, schemes=("cyclic", "cyclic"))
+    with pytest.raises(ValueError, match="SweepSpec.algorithms.*'fedxyz'"):
+        dataclasses.replace(BASE, algorithms=("fedpbc", "fedxyz"))
+    with pytest.raises(ValueError, match="SweepSpec.schemes.*'carrier'"):
+        dataclasses.replace(BASE, schemes=("bernoulli_ti", "carrier"))
+    # a valid spec still constructs
+    dataclasses.replace(BASE, algorithms=("mifa",), seeds=(5,))

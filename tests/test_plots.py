@@ -1,0 +1,94 @@
+"""Contract tests for ``repro.experiments.plots`` curve exports.
+
+Pins the three behaviors downstream tooling depends on: the CSV column
+contract (``round,mean,std,ci95,n_seeds`` with values matching a direct
+numpy computation), the single-seed degenerate case (std/ci95 exactly 0, not
+NaN from a ddof=1 std of one row), and the empty-store case (a clear
+``ValueError`` naming the store instead of a silent zero-file export).
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.experiments.plots import export_curves
+from repro.experiments.results import ResultsStore
+
+
+def _append(store, *, algo="fedpbc", seeds=(0,), test_acc, loss=None,
+            eval_rounds=None, suite="t1"):
+    arrays = {"test_acc": np.asarray(test_acc, np.float64)}
+    if loss is not None:
+        arrays["loss"] = np.asarray(loss, np.float64)
+    rec = {"suite": suite, "algo": algo, "scheme": "bernoulli_ti",
+           "seeds": list(seeds), "rounds": 5, "eval_every": 2,
+           "hparams": {"lr": 0.1}, "spec": {"num_clients": 8}}
+    if eval_rounds is not None:
+        rec["eval_rounds"] = eval_rounds
+    return store.append(rec, arrays=arrays)
+
+
+def _read_csv(path):
+    with open(path) as f:
+        header = f.readline().strip()
+        rows = [line.strip().split(",") for line in f if line.strip()]
+    return header, rows
+
+
+def test_curve_csv_column_contract(tmp_path):
+    """Header and per-column values are pinned: round indices come from the
+    record's eval_rounds (acc) / 1..K (loss), and mean/std/ci95 match the
+    textbook seed-axis formulas."""
+    store = ResultsStore(str(tmp_path / "s"))
+    acc = [[0.2, 0.5, 0.8], [0.4, 0.7, 0.6]]
+    loss = [[1.0, 0.8], [0.6, 0.4]]
+    _append(store, seeds=[0, 1], test_acc=acc, loss=loss,
+            eval_rounds=[2, 4, 5])
+    written = export_curves(store, str(tmp_path / "curves"))
+    acc_path = [p for p in written if p.endswith("_acc.csv")][0]
+    loss_path = [p for p in written if p.endswith("_loss.csv")][0]
+
+    header, rows = _read_csv(acc_path)
+    assert header == "round,mean,std,ci95,n_seeds"
+    assert [int(r[0]) for r in rows] == [2, 4, 5]
+    a = np.asarray(acc)
+    for i, r in enumerate(rows):
+        assert float(r[1]) == pytest.approx(a[:, i].mean(), abs=1e-6)
+        std = a[:, i].std(ddof=1)
+        assert float(r[2]) == pytest.approx(std, abs=1e-6)
+        assert float(r[3]) == pytest.approx(1.96 * std / math.sqrt(2),
+                                            abs=1e-6)
+        assert int(r[4]) == 2
+
+    header, rows = _read_csv(loss_path)
+    assert header == "round,mean,std,ci95,n_seeds"
+    assert [int(r[0]) for r in rows] == [1, 2]     # per-round axis is 1-based
+
+
+def test_single_seed_store_exports_zero_width_ci(tmp_path):
+    """One seed: std and ci95 are exactly 0.0 (no ddof=1 NaN), mean is the
+    seed's own curve."""
+    store = ResultsStore(str(tmp_path / "s"))
+    _append(store, seeds=[7], test_acc=[[0.25, 0.75]], eval_rounds=[2, 4])
+    written = export_curves(store, str(tmp_path / "curves"))
+    assert len(written) == 1
+    header, rows = _read_csv(written[0])
+    assert header == "round,mean,std,ci95,n_seeds"
+    assert [float(r[1]) for r in rows] == [0.25, 0.75]
+    assert all(float(r[2]) == 0.0 and float(r[3]) == 0.0 for r in rows)
+    assert all(int(r[4]) == 1 for r in rows)
+
+
+def test_empty_store_raises_clear_error(tmp_path):
+    """An empty/missing store (or an over-narrow filter) is a caller mistake:
+    export_curves must say so, naming the store, instead of writing nothing."""
+    empty = ResultsStore(str(tmp_path / "nothing-here"))
+    with pytest.raises(ValueError, match="no records to export.*nothing-here"):
+        export_curves(empty, str(tmp_path / "curves"))
+
+    store = ResultsStore(str(tmp_path / "s"))
+    _append(store, test_acc=[[0.5]], suite="present")
+    with pytest.raises(ValueError, match="matching filters.*absent"):
+        export_curves(store, str(tmp_path / "curves"), suite="absent")
+    # the matching suite still exports
+    assert export_curves(store, str(tmp_path / "curves"), suite="present")

@@ -314,6 +314,17 @@ def test_sweep_throughput_bench_records_speedup():
         # the baked path compiles a pair per grid point
         assert ab["traced_compile_entries"] == 2, ab
         assert ab["per_value_compile_entries"] == 2 * ab["n_points"], ab
+    # the algorithm axis: the whole fedavg family compiled ONCE (vs one
+    # program per algorithm) and the switch-based program tracked the
+    # per-algorithm path
+    aa = bench["algo_axis"]
+    assert aa["family"] == ["fedpbc", "fedavg", "fedavg_all",
+                            "fedavg_known_p"], aa
+    assert aa["trajectory_max_abs_diff"] <= 1e-5, aa
+    if aa["batched_compile_programs"] >= 0:
+        assert aa["batched_compile_programs"] == 1, aa
+        assert aa["per_algo_compile_programs"] == len(aa["family"]), aa
+    assert aa["speedup_cold"] > 1.0, aa
     # the device-scaling arm always records an entry; when it ran sharded,
     # the placement change must not have moved a single trajectory
     ds = bench["device_scaling"]

@@ -234,6 +234,48 @@ def test_period_override_shares_compile_and_changes_trajectory():
                                       np.asarray(evals_seq))
 
 
+def test_label_noise_shared_swap_reuses_compile_without_new_task():
+    """The ROADMAP "traced dataset swaps" path: a same-shape label-noise
+    variant of the dataset rides the traced ``shared`` input of an already
+    compiled runner — no new task object, no new partition, zero new jit
+    entries — and the swap is actually wired (trajectories change)."""
+    import repro.experiments.grid as grid_mod
+    from repro.experiments.tasks import with_label_noise
+
+    spec = dataclasses.replace(BASE, rounds=4, eval_every=2)
+    task = get_traced_task(spec)
+    fed = spec.cell_config("fedpbc", "bernoulli_ti")
+    runner = _runner_for(spec, fed, task, METRIC_KEYS)
+    batch = make_cell_batch(spec, fed, task)
+    states, out = runner(batch)
+    has_introspection = hasattr(runner.scan_batch, "_cache_size")
+    if has_introspection:
+        n_entries = (runner.init_batch._cache_size()
+                     + runner.scan_batch._cache_size())
+    n_tasks = len(grid_mod._TRACED_TASK_CACHE)
+
+    noisy = with_label_noise(task.shared, jax.random.PRNGKey(7), frac=0.5,
+                             classes=spec.classes)
+    # same shapes/dtypes, different labels, untouched features
+    assert noisy["y"].shape == task.shared["y"].shape
+    assert noisy["y"].dtype == task.shared["y"].dtype
+    assert not np.array_equal(np.asarray(noisy["y"]),
+                              np.asarray(task.shared["y"]))
+    np.testing.assert_array_equal(np.asarray(noisy["x"]),
+                                  np.asarray(task.shared["x"]))
+
+    states2, out2 = runner(dataclasses.replace(batch, shared=noisy))
+    if has_introspection:
+        assert (runner.init_batch._cache_size()
+                + runner.scan_batch._cache_size()) == n_entries
+    assert len(grid_mod._TRACED_TASK_CACHE) == n_tasks
+    # the variant reached the training loop and the in-scan eval
+    assert not np.array_equal(np.asarray(out2["metrics"]["loss"]),
+                              np.asarray(out["metrics"]["loss"]))
+    assert not np.array_equal(np.asarray(out2["evals"]),
+                              np.asarray(out["evals"]))
+
+
 def test_hparam_points_flattening_and_result_coords():
     """Point-major flattening: every CellResult carries its coordinates, in
     ``itertools.product`` order over (lr, gamma, alpha, sigma0, delta)."""
