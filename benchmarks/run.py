@@ -25,7 +25,10 @@ SUITE_INFO = {
               ("seed_axis", "hparam_ablation", "algo_axis",
                "device_scaling")),
     "roofline": ("arithmetic-intensity roofline of the model zoo", ()),
-    "kernels": ("pallas kernels vs reference ops", ()),
+    "kernels": ("pallas kernels vs reference ops (fused batched aggregation "
+                "+ TPU-target oracles)",
+                ("batched_agg_B8_m32_n1024", "batched_agg_B8_m256_n1024",
+                 "batched_agg_B64_m32_n1024", "batched_agg_B64_m256_n1024")),
 }
 
 

@@ -386,8 +386,19 @@ class AlgorithmSpec:
         return jax.tree.map(
             lambda c, s: jnp.where(from_clients, c, s), clients, tiled)
 
+    @property
+    def fusable(self) -> bool:
+        """Whether every member's aggregation folds into the fused Pallas
+        kernel's branch select (``repro.kernels.dispatch.FUSED_OPS``) — the
+        empty-state family. Stateful rules keep the ``lax.switch`` path."""
+        from repro.kernels.dispatch import FUSED_OPS
+        return all(n in FUSED_OPS for n in self.names)
+
     def aggregate(self, algo_id, algo_state, server, clients, x_star, active,
-                  p_t, t) -> tuple:
+                  p_t, t, use_kernel: bool = False) -> tuple:
+        if use_kernel and self.fusable:
+            return self._aggregate_fused(algo_id, algo_state, server,
+                                         x_star, active, p_t)
         branches = [_DEFS[n].make_branch(self) for n in self.names]
         if _is_static(algo_id) or len(self.names) == 1:
             idx = int(algo_id) if _is_static(algo_id) else 0
@@ -396,10 +407,40 @@ class AlgorithmSpec:
         return jax.lax.switch(algo_id, branches, algo_state, server, clients,
                               x_star, active, p_t, t)
 
-    def bind(self, algo_id: Union[int, jnp.ndarray] = 0) -> Algorithm:
+    def _aggregate_fused(self, algo_id, algo_state, server, x_star, active,
+                         p_t) -> tuple:
+        """The fused-kernel aggregate: one backend-dispatched pass per leaf
+        computes the new server params with the family's weighting branches
+        selected by a (possibly traced) opcode INSIDE the kernel body, then
+        one select updates the clients (postponed broadcast for fedpbc,
+        instant for the FedAvg variants). Subsumes the ``lax.switch`` that
+        evaluates every branch under vmap; the family's ``algo_state`` is
+        empty and passes through untouched."""
+        from repro.kernels.dispatch import FUSED_OPS, fused_agg_pytree
+
+        if _is_static(algo_id):
+            name = self.names[int(algo_id)]
+            op = FUSED_OPS[name]
+            bcast = active if name == "fedpbc" else jnp.ones_like(active)
+        else:
+            op = jnp.asarray([FUSED_OPS[n] for n in self.names],
+                             jnp.int32)[algo_id]
+            is_pbc = jnp.asarray([n == "fedpbc" for n in self.names])[algo_id]
+            bcast = active | ~is_pbc
+        new_server = fused_agg_pytree(x_star, active, op, server, p_t)
+        # fedpbc: only active clients receive the new global model (the
+        # postponed broadcast); every other member broadcasts to all m —
+        # the all-ones mask makes bcast_where coincide with _tile.
+        new_clients = bcast_where(bcast, new_server, x_star)
+        return algo_state, new_server, new_clients
+
+    def bind(self, algo_id: Union[int, jnp.ndarray] = 0,
+             use_kernel: bool = False) -> Algorithm:
         """Fix the dispatch index and expose the historical ``Algorithm``
         interface. A python-int ``algo_id`` yields the exact per-algorithm
-        trace; a traced one yields the family switch."""
+        trace; a traced one yields the family switch. ``use_kernel`` routes
+        a fusable family's aggregation through the backend-dispatched fused
+        kernel (``repro.kernels.dispatch``) instead of the XLA switch."""
         if _is_static(algo_id):
             name = self.names[int(algo_id)]
             needs_p = _DEFS[name].needs_p
@@ -411,16 +452,17 @@ class AlgorithmSpec:
             init=self.init,
             client_start=lambda a, s, c: self.client_start(algo_id, a, s, c),
             aggregate=lambda a, s, c, xs, act, p, t: self.aggregate(
-                algo_id, a, s, c, xs, act, p, t),
+                algo_id, a, s, c, xs, act, p, t, use_kernel=use_kernel),
             needs_p=needs_p)
 
 
 def as_algorithm(algorithm: Union[Algorithm, AlgorithmSpec],
-                 algo_id=0) -> Algorithm:
+                 algo_id=0, use_kernel: bool = False) -> Algorithm:
     """Normalize an ``Algorithm | AlgorithmSpec`` argument: specs are bound at
-    ``algo_id``, algorithms pass through (their dispatch is already fixed)."""
+    ``algo_id`` (with the aggregation path picked by ``use_kernel``),
+    algorithms pass through (their dispatch is already fixed)."""
     if isinstance(algorithm, AlgorithmSpec):
-        return algorithm.bind(algo_id)
+        return algorithm.bind(algo_id, use_kernel=use_kernel)
     return algorithm
 
 

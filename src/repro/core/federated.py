@@ -103,7 +103,7 @@ def local_steps(loss_fn, optimizer, params, opt_state, batches, s: int):
 def make_round_fn(loss_fn: Callable, optimizer, algorithm,
                   link: LinkProcess, fed_cfg: FederationConfig,
                   spmd_axis_name: Optional[str] = None,
-                  algo_id=0):
+                  algo_id=0, use_kernel: bool = False):
     """Build the jit-able round function.
 
     ``algorithm``: an ``Algorithm``, or an ``AlgorithmSpec`` table bound at
@@ -114,8 +114,13 @@ def make_round_fn(loss_fn: Callable, optimizer, algorithm,
     ``spmd_axis_name``: mesh axis the client dimension is sharded over in the
     ``pod_silo`` placement (vmap's spmd_axis_name); None for simulated /
     stacked_data placements.
+
+    ``use_kernel``: route a fusable family's server aggregation through the
+    backend-dispatched fused Pallas kernel (``repro.kernels.dispatch``)
+    instead of the XLA masked-mean switch. Ignored for an already-bound
+    ``Algorithm`` (its aggregation path is baked).
     """
-    algorithm = as_algorithm(algorithm, algo_id)
+    algorithm = as_algorithm(algorithm, algo_id, use_kernel=use_kernel)
     s = fed_cfg.local_steps
 
     def round_fn(state: FedState, batches) -> tuple:
@@ -182,11 +187,12 @@ def make_run_rounds(loss_fn: Callable, optimizer, algorithm,
                     spmd_axis_name: Optional[str] = None,
                     metric_keys=DEFAULT_METRIC_KEYS,
                     donate: Optional[bool] = None,
-                    algo_id=0):
+                    algo_id=0, use_kernel: bool = False):
     """Build the scanned multi-round entry point.
 
     ``algorithm`` may be an ``AlgorithmSpec`` table bound at ``algo_id``
-    (see ``make_round_fn``).
+    with the aggregation path picked by ``use_kernel`` (see
+    ``make_round_fn``).
 
     Returns ``run_rounds(state, ds_state, data_key, num_rounds)`` →
     ``(state', ds_state', metrics)`` where every entry of ``metrics`` is a
@@ -198,7 +204,8 @@ def make_run_rounds(loss_fn: Callable, optimizer, algorithm,
     without doubling peak memory.
     """
     round_fn = make_round_fn(loss_fn, optimizer, algorithm, link, fed_cfg,
-                             spmd_axis_name, algo_id=algo_id)
+                             spmd_axis_name, algo_id=algo_id,
+                             use_kernel=use_kernel)
     step = make_round_step(round_fn, source)
     if donate is None:
         donate = jax.default_backend() != "cpu"  # CPU ignores donation noisily

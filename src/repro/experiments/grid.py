@@ -50,6 +50,7 @@ from repro.core.algorithms import (
     make_algorithm_spec,
 )
 from repro.core.connectivity import build_base_probs, make_link_process
+from repro.kernels.dispatch import resolve_use_kernel
 from repro.experiments.results import ResultsStore, summarize
 from repro.experiments.shard import (
     AUTO,
@@ -138,6 +139,13 @@ class SweepSpec:
     n_per_class: int = 600
     n_train: int = 5000
     per_client: int = 64
+    # server-aggregation path: True routes fusable families through the
+    # backend-dispatched fused Pallas kernel (repro.kernels.dispatch), False
+    # keeps the XLA masked-mean switch, None defers to the REPRO_USE_KERNEL
+    # env default. Part of the runner-cache key (the two paths are distinct
+    # traced programs); results match within the documented per-backend
+    # tolerance (bitwise on CPU fp32 — tests/test_kernel_sweep.py).
+    use_kernel: Optional[bool] = None
     # extra FederationConfig field overrides, applied last (e.g.
     # (("fedau_K", 100), ("period", 20)))
     fed_overrides: Tuple[Tuple[str, Any], ...] = ()
@@ -294,8 +302,13 @@ def _runner_for(spec: SweepSpec, fed: FederationConfig, task,
     family = algo_family(fed.algorithm)
     canon = dataclasses.replace(fed, alpha=0.0, sigma0=0.0, delta=0.0,
                                 gamma=0.0, period=0, algorithm=family[0])
+    # use_kernel picks between two distinct traced programs (fused kernel vs
+    # XLA switch), so the resolved bool is part of the cache key; within one
+    # sweep the value is constant, so a whole grid still compiles each
+    # (family, scheme) stage pair exactly once.
+    use_kernel = resolve_use_kernel(spec.use_kernel)
     key = (_task_key(spec), canon, spec.rounds, spec.eval_every,
-           tuple(metric_keys))
+           tuple(metric_keys), use_kernel)
     if key not in _RUNNER_CACHE:
         algo = make_algorithm_spec(family, fed)
         _RUNNER_CACHE[key] = make_batched_run_rounds(
@@ -308,7 +321,8 @@ def _runner_for(spec: SweepSpec, fed: FederationConfig, task,
             num_rounds=spec.rounds,
             eval_every=spec.eval_every,
             eval_fn=task.eval_test,
-            metric_keys=metric_keys)
+            metric_keys=metric_keys,
+            use_kernel=use_kernel)
     return _RUNNER_CACHE[key]
 
 

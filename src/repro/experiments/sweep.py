@@ -128,7 +128,8 @@ def make_batched_run_rounds(loss_fn: Callable, algorithm,
                             num_rounds: int,
                             eval_every: int = 0,
                             eval_fn: Optional[Callable] = None,
-                            metric_keys=DEFAULT_METRIC_KEYS):
+                            metric_keys=DEFAULT_METRIC_KEYS,
+                            use_kernel: bool = False):
     """Build the jitted B-trajectory runner for one grid cell.
 
     Args:
@@ -157,6 +158,13 @@ def make_batched_run_rounds(loss_fn: Callable, algorithm,
         initialized model (E is never 0). ``eval_every == K`` fires exactly
         one eval, at K. The result comes back as ``out["evals"] [B, E]`` with
         boundaries ``eval_rounds(...)``.
+      use_kernel: route a fusable family's server aggregation through the
+        backend-dispatched fused Pallas kernel (one pass per leaf, branch
+        select inside the kernel body) instead of the XLA masked-mean
+        switch; see ``repro.kernels.dispatch`` for backend resolution and
+        the per-backend tolerance contract. The traced program shape is
+        unchanged — one compiled (init, scan) pair still serves the whole
+        family.
 
     Returns ``run(batch: CellBatch) -> (states, out)`` where ``states`` is a
     [B]-batched ``FedState`` and ``out["metrics"]`` maps each metric key to a
@@ -184,7 +192,7 @@ def make_batched_run_rounds(loss_fn: Callable, algorithm,
         default) is the historical static program."""
         if isinstance(algo_id, tuple) and algo_id == ():
             algo_id = 0
-        return as_algorithm(algorithm, algo_id)
+        return as_algorithm(algorithm, algo_id, use_kernel=use_kernel)
 
     def init_point(keys, p_base, hparams, data, shared, algo_id):
         algo = _bound(algo_id)

@@ -1,0 +1,137 @@
+"""Backend-aware kernel dispatch for the fused aggregation hot path.
+
+One resolution layer decides how the sweep engine's server aggregation
+executes, so the same traced program runs everywhere:
+
+- ``"compiled"`` — the Pallas kernel compiled for the accelerator
+  (``interpret=False``); the default on TPU/GPU backends.
+- ``"interpret"`` — the Pallas kernel in interpret mode: the kernel body is
+  traced to plain XLA ops, so it runs (and is differentiable/shardable)
+  anywhere; the default on CPU. On CPU this is bitwise identical to the
+  engine's XLA path for fp32 leaves.
+- ``"xla"`` — the pure-jnp reference (``fused_masked_agg_ref``), always
+  available as a fallback independent of Pallas.
+
+Overrides (highest precedence first): an explicit ``backend=`` argument,
+the ``REPRO_KERNEL_BACKEND`` environment variable (``compiled`` /
+``interpret`` / ``xla``), then the per-platform default above.
+
+Whether the engine uses the kernel at all is a separate knob, threaded as
+``use_kernel`` through ``AlgorithmSpec.aggregate`` -> ``make_round_fn`` ->
+``make_batched_run_rounds`` -> ``SweepSpec``; ``None`` at any of those
+levels defers to :func:`use_kernel_default` (the ``REPRO_USE_KERNEL``
+environment variable, default off).
+
+Tolerance contract vs the engine's XLA masked-mean path, per backend
+(equality statements are between JITTED programs — the only way the hot
+path runs either side; op-by-op eager dispatch may fuse multiply+reduce
+differently at one-ulp level, see ``tests/test_kernels.py``):
+
+==============  ============================================================
+``interpret``   fp32 leaves: bitwise on CPU (a family sweep with
+                ``use_kernel=True`` equals the XLA-path program per
+                trajectory, pinned by ``tests/test_kernel_sweep.py``);
+                bf16 leaves: the kernel accumulates in fp32 where the XLA
+                path computes in bf16 — differences up to ~1e-2 * magnitude
+                (bf16 epsilon).
+``xla``         identical math to the kernel (fp32 accumulation): bitwise
+                vs ``interpret`` on every platform.
+``compiled``    allclose within 1e-6 (fp32) / 2e-2 (bf16): accelerator
+                reduction order inside a block may differ from XLA's.
+==============  ============================================================
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.masked_agg import (
+    OP_ALL,
+    OP_KNOWN_P,
+    OP_MEAN,
+    fused_masked_agg,
+)
+from repro.kernels.ref import fused_masked_agg_ref
+
+Pytree = Any
+
+BACKENDS = ("compiled", "interpret", "xla")
+
+_ENV_BACKEND = "REPRO_KERNEL_BACKEND"
+_ENV_USE_KERNEL = "REPRO_USE_KERNEL"
+
+# Aggregation opcode per algorithm name — the branch table the fused kernel
+# folds into one select. Only these (the empty-state family) are fusable;
+# stateful rules (fedau/mifa/f3ast/fedpbc_m) keep the lax.switch path.
+FUSED_OPS = {
+    "fedpbc": OP_MEAN,
+    "fedavg": OP_MEAN,
+    "fedavg_all": OP_ALL,
+    "fedavg_known_p": OP_KNOWN_P,
+}
+
+
+def resolve_backend(backend: Optional[str] = None) -> str:
+    """The kernel execution backend: explicit arg > ``REPRO_KERNEL_BACKEND``
+    env var > platform default (compiled on tpu/gpu, interpret on cpu)."""
+    if backend is None:
+        backend = os.environ.get(_ENV_BACKEND) or None
+    if backend is None:
+        backend = ("compiled" if jax.default_backend() in ("tpu", "gpu")
+                   else "interpret")
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown kernel backend {backend!r}; "
+                         f"available: {BACKENDS}")
+    return backend
+
+
+def use_kernel_default() -> bool:
+    """The ambient ``use_kernel`` default: ``REPRO_USE_KERNEL`` env var
+    (1/true/yes/on), else False (the engine's historical XLA path)."""
+    return os.environ.get(_ENV_USE_KERNEL, "").strip().lower() in (
+        "1", "true", "yes", "on")
+
+
+def resolve_use_kernel(flag: Optional[bool] = None) -> bool:
+    """Normalize a ``use_kernel`` knob: None defers to the env default."""
+    return use_kernel_default() if flag is None else bool(flag)
+
+
+def fused_agg(x, mask, op, prev, p, *, block_n: int = 4096,
+              backend: Optional[str] = None):
+    """Backend-dispatched fused aggregation over one flattened leaf.
+
+    Shapes as in ``fused_masked_agg``: ``[m, n]`` single-trajectory or
+    ``[B, m, n]`` sweep layout (the 2-D form also lifts under ``vmap``).
+    Returns fp32 new server params ``[n]`` / ``[B, n]``.
+    """
+    backend = resolve_backend(backend)
+    if backend == "xla":
+        return fused_masked_agg_ref(x, mask, op, prev, p)
+    return fused_masked_agg(x, mask, op, prev, p, block_n=block_n,
+                            interpret=(backend == "interpret"))
+
+
+def fused_agg_pytree(x_star: Pytree, mask, op, server: Pytree, p, *,
+                     block_n: int = 4096,
+                     backend: Optional[str] = None) -> Pytree:
+    """Per-leaf fused aggregation over an ``[m, ...]`` client-stacked pytree.
+
+    Every leaf of ``x_star`` is flattened to ``[m, n]``, aggregated by one
+    kernel call against the matching ``server`` leaf (flattened ``[n]``),
+    and cast back to the leaf's dtype/shape. ``mask``/``p`` are shared
+    across leaves ([m]); ``op`` is the per-trajectory branch opcode.
+    Composable with ``vmap`` for the batched sweep layout.
+    """
+    backend = resolve_backend(backend)
+
+    def leaf(xs, s):
+        m = xs.shape[0]
+        out = fused_agg(xs.reshape(m, -1), mask, op,
+                        s.reshape(-1), p, block_n=block_n, backend=backend)
+        return out.reshape(s.shape).astype(s.dtype)
+
+    return jax.tree.map(leaf, x_star, server)

@@ -1,12 +1,38 @@
-"""Pallas TPU kernel: FedPBC masked client aggregation (Alg. 1 line 11).
+"""Pallas kernels for the server-side aggregation hot spot (Alg. 1 line 11).
 
-The server-side hot spot: out = (1/|A|) sum_{i in A} x_i over the stacked
-client-parameter axis. On TPU this is a memory-bound streaming reduction; the
-kernel tiles the (flattened) parameter dimension into VMEM-resident blocks
-and keeps the whole (small) client axis per block, so each output element is
-produced in one pass over HBM.
+Two entry points share one tiled, memory-bound reduction structure:
 
-Grid: (n // block_n,).  x block: [m, block_n] VMEM; mask: [m, 1] VMEM.
+- :func:`masked_agg` — the historical single-trajectory active-client mean
+  over ``[m, n]`` stacked client params (kept for callers/benchmarks);
+- :func:`fused_masked_agg` — the sweep-layout kernel: ``[B, m, n]`` stacked
+  client params with a per-trajectory ``[B, m]`` active mask, a traced
+  ``[B]`` branch opcode, the previous server params ``[B, n]`` and the
+  connection probabilities ``[B, m]``. The state-compatible family's
+  weighting branches (fedpbc / fedavg / fedavg_all / fedavg_known_p) are
+  folded into ONE select inside the kernel body, so the whole family's
+  server update is a single pass over HBM instead of a ``lax.switch`` that
+  evaluates every branch under vmap.
+
+Branch opcodes (see ``repro.kernels.dispatch``):
+
+- ``OP_MEAN`` (0): guarded active-client mean — ``sum(mask*x)/max(|A|,1)``,
+  falling back to ``prev`` when no client is active (the engine's
+  ``any_active`` guard, folded into the kernel: a zero-active round
+  preserves the previous server params instead of zeroing the model);
+- ``OP_ALL`` (1): all-client delta mean — ``prev + sum(mask*(x-prev))/m``;
+- ``OP_KNOWN_P`` (2): known-p importance weighting —
+  ``prev + sum(mask*(x-prev) / max(p, 1e-3)) / m``.
+
+All arithmetic is fp32 regardless of input dtype (fp32 accumulation for
+bf16 inputs); outputs are fp32 and callers cast back per leaf. The kernel
+tiles the (flattened) parameter dimension into VMEM-resident blocks and
+keeps the whole (small) client axis per block, so each output element is
+produced in one pass: grid ``(n/bn,)`` (2-D input) or ``(B, n/bn)`` (3-D).
+
+``interpret=True`` (the CPU default via ``repro.kernels.dispatch``) traces
+the body to plain XLA ops — on CPU the result is bitwise identical to the
+engine's XLA masked-mean path for fp32 leaves; ``interpret=False`` compiles
+the kernel on TPU/GPU (documented tolerance: see README "Kernels").
 """
 from __future__ import annotations
 
@@ -16,32 +42,186 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+# Branch opcodes of the fused kernel (must match repro.kernels.dispatch).
+OP_MEAN = 0      # fedpbc / fedavg: guarded active-client mean
+OP_ALL = 1       # fedavg_all: all-client delta mean
+OP_KNOWN_P = 2   # fedavg_known_p: 1/(m * p_i) delta weighting
 
-def _kernel(mask_ref, x_ref, o_ref):
+
+def _round_up(n: int, mult: int) -> int:
+    return -(-n // mult) * mult
+
+
+# ---------------------------------------------------------------------------
+# Historical single-trajectory active-mean kernel
+# ---------------------------------------------------------------------------
+
+
+def _mean_kernel(mask_ref, x_ref, o_ref):
     x = x_ref[...].astype(jnp.float32)              # [m, bn]
     mask = mask_ref[...].astype(jnp.float32)        # [m, 1]
     denom = jnp.maximum(jnp.sum(mask), 1.0)
     o_ref[...] = (jnp.sum(x * mask, axis=0, keepdims=True) / denom)[0]
 
 
+def _guarded_mean_kernel(mask_ref, prev_ref, x_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)              # [m, bn]
+    mask = mask_ref[...].astype(jnp.float32)        # [m, 1]
+    prev = prev_ref[...].astype(jnp.float32)        # [1, bn]
+    n_active = jnp.sum(mask)
+    agg = jnp.sum(x * mask, axis=0, keepdims=True) / jnp.maximum(n_active, 1.0)
+    o_ref[...] = jnp.where(n_active > 0, agg, prev)[0]
+
+
 @functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
-def masked_agg(x, mask, *, block_n: int = 4096, interpret: bool = True):
-    """x: [m, n]; mask: [m]. Returns [n] fp32 (active-client mean)."""
+def masked_agg(x, mask, prev=None, *, block_n: int = 4096,
+               interpret: bool = True):
+    """x: [m, n]; mask: [m]. Returns [n] fp32 (active-client mean).
+
+    Zero-active semantics: with ``prev=None`` an empty active set yields the
+    zero vector — exactly ``algorithms.masked_mean``'s fallback (callers
+    guard with ``any_active``). Passing ``prev`` ([n]) folds that guard into
+    the kernel: an empty active set returns ``prev`` (the previous server
+    params) instead of silently zeroing the model, matching the engine-level
+    ``jnp.where(any_active, masked_mean(...), server)`` semantics.
+    """
     m, n = x.shape
-    pad = (-n) % block_n
+    bn = min(block_n, _round_up(n, 128))
+    pad = (-n) % bn
     if pad:
         x = jnp.pad(x, ((0, 0), (0, pad)))
     np_ = x.shape[1]
     mask2 = mask.astype(jnp.float32).reshape(m, 1)
+    if prev is None:
+        out = pl.pallas_call(
+            _mean_kernel,
+            grid=(np_ // bn,),
+            in_specs=[
+                pl.BlockSpec((m, 1), lambda i: (0, 0)),
+                pl.BlockSpec((m, bn), lambda i: (0, i)),
+            ],
+            out_specs=pl.BlockSpec((bn,), lambda i: (i,)),
+            out_shape=jax.ShapeDtypeStruct((np_,), jnp.float32),
+            interpret=interpret,
+        )(mask2, x)
+        return out[:n]
+    prev2 = jnp.pad(prev.astype(jnp.float32), (0, pad)).reshape(1, np_)
     out = pl.pallas_call(
-        _kernel,
-        grid=(np_ // block_n,),
+        _guarded_mean_kernel,
+        grid=(np_ // bn,),
         in_specs=[
             pl.BlockSpec((m, 1), lambda i: (0, 0)),
-            pl.BlockSpec((m, block_n), lambda i: (0, i)),
+            pl.BlockSpec((1, bn), lambda i: (0, i)),
+            pl.BlockSpec((m, bn), lambda i: (0, i)),
         ],
-        out_specs=pl.BlockSpec((block_n,), lambda i: (i,)),
+        out_specs=pl.BlockSpec((bn,), lambda i: (i,)),
         out_shape=jax.ShapeDtypeStruct((np_,), jnp.float32),
         interpret=interpret,
-    )(mask2, x)
+    )(mask2, prev2, x)
     return out[:n]
+
+
+# ---------------------------------------------------------------------------
+# Fused family-aggregation kernel (the sweep hot path)
+# ---------------------------------------------------------------------------
+
+
+def _fused_kernel(op_ref, mask_ref, p_ref, prev_ref, x_ref, o_ref):
+    """One [m, bn] block of one trajectory: every weighting variant computed
+    from the single streamed read of ``x`` and selected by ``op``."""
+    x = x_ref[...].astype(jnp.float32)              # [m, bn]
+    mask = mask_ref[...].astype(jnp.float32)        # [m, 1]
+    p = p_ref[...].astype(jnp.float32)              # [m, 1]
+    prev = prev_ref[...].astype(jnp.float32)        # [1, bn]
+    op = op_ref[0, 0]
+    m = x.shape[0]
+    # OP_MEAN: guarded active mean (the any_active guard folded in)
+    n_active = jnp.sum(mask)
+    mean_agg = jnp.sum(x * mask, axis=0, keepdims=True) \
+        / jnp.maximum(n_active, 1.0)
+    mean_out = jnp.where(n_active > 0, mean_agg, prev)
+    # OP_ALL / OP_KNOWN_P: server + weighted delta sum (weights written in
+    # the exact division order of the engine branches, for bitwise parity)
+    delta = x - prev
+    all_out = prev + jnp.sum(delta * (mask / m), axis=0, keepdims=True)
+    w_kp = mask / jnp.maximum(p, 1e-3) / m
+    kp_out = prev + jnp.sum(delta * w_kp, axis=0, keepdims=True)
+    o_ref[...] = jnp.where(op == OP_MEAN, mean_out,
+                           jnp.where(op == OP_ALL, all_out, kp_out))
+
+
+def _fused_call_2d(x, mask, op, prev, p, bn: int, interpret: bool):
+    m, np_ = x.shape
+    return pl.pallas_call(
+        _fused_kernel,
+        grid=(np_ // bn,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((m, 1), lambda i: (0, 0)),
+            pl.BlockSpec((m, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, bn), lambda i: (0, i)),
+            pl.BlockSpec((m, bn), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((1, bn), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, np_), jnp.float32),
+        interpret=interpret,
+    )(op, mask, p, prev, x)[0]
+
+
+def _fused_batched_kernel(op_ref, mask_ref, p_ref, prev_ref, x_ref, o_ref):
+    _fused_kernel(op_ref[0], mask_ref[0][..., None], p_ref[0][..., None],
+                  prev_ref, x_ref[0], o_ref)
+
+
+def _fused_call_3d(x, mask, op, prev, p, bn: int, interpret: bool):
+    B, m, np_ = x.shape
+    return pl.pallas_call(
+        _fused_batched_kernel,
+        grid=(B, np_ // bn),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, m), lambda b, i: (b, 0)),
+            pl.BlockSpec((1, m), lambda b, i: (b, 0)),
+            pl.BlockSpec((1, bn), lambda b, i: (b, i)),
+            pl.BlockSpec((1, m, bn), lambda b, i: (b, 0, i)),
+        ],
+        out_specs=pl.BlockSpec((1, bn), lambda b, i: (b, i)),
+        out_shape=jax.ShapeDtypeStruct((B, np_), jnp.float32),
+        interpret=interpret,
+    )(op, mask, p, prev, x)
+
+
+def fused_masked_agg(x, mask, op, prev, p, *, block_n: int = 4096,
+                     interpret: bool = True):
+    """Fused family aggregation over stacked client params.
+
+    Shapes — single trajectory: ``x [m, n]``, ``mask [m]``, ``op`` scalar,
+    ``prev [n]``, ``p [m]``; sweep layout: ``x [B, m, n]``, ``mask [B, m]``,
+    ``op [B]``, ``prev [B, n]``, ``p [B, m]``. Returns fp32 ``[n]`` /
+    ``[B, n]``: the new server params under the branch each trajectory's
+    ``op`` selects (see module docstring for the opcode table).
+
+    The 2-D form also composes with ``jax.vmap`` (Pallas lifts the call to a
+    batched grid), which is how the round engine reaches the sweep layout.
+    """
+    if x.ndim == 2:
+        m, n = x.shape
+        bn = min(block_n, _round_up(n, 128))
+        pad = (-n) % bn
+        xp = jnp.pad(x, ((0, 0), (0, pad))) if pad else x
+        prevp = jnp.pad(prev.astype(jnp.float32), (0, pad)).reshape(1, -1)
+        out = _fused_call_2d(
+            xp, mask.astype(jnp.float32).reshape(m, 1),
+            jnp.asarray(op, jnp.int32).reshape(1, 1),
+            prevp, p.astype(jnp.float32).reshape(m, 1), bn, interpret)
+        return out[:n]
+    B, m, n = x.shape
+    bn = min(block_n, _round_up(n, 128))
+    pad = (-n) % bn
+    xp = jnp.pad(x, ((0, 0), (0, 0), (0, pad))) if pad else x
+    prevp = jnp.pad(prev.astype(jnp.float32), ((0, 0), (0, pad)))
+    out = _fused_call_3d(
+        xp, mask.astype(jnp.float32),
+        jnp.asarray(op, jnp.int32).reshape(B, 1, 1),
+        prevp, p.astype(jnp.float32), bn, interpret)
+    return out[:, :n]

@@ -10,21 +10,45 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.dispatch import (
+    FUSED_OPS,
+    fused_agg,
+    fused_agg_pytree,
+    resolve_backend,
+    resolve_use_kernel,
+    use_kernel_default,
+)
 from repro.kernels.flash_attention import flash_attention
-from repro.kernels.masked_agg import masked_agg
-from repro.kernels.ref import flash_attention_ref, masked_agg_ref, rwkv6_chunk_ref
+from repro.kernels.masked_agg import (
+    OP_ALL,
+    OP_KNOWN_P,
+    OP_MEAN,
+    fused_masked_agg,
+    masked_agg,
+)
+from repro.kernels.ref import (
+    flash_attention_ref,
+    fused_masked_agg_ref,
+    masked_agg_ref,
+    rwkv6_chunk_ref,
+)
 from repro.kernels.rwkv6_chunk import rwkv6_chunk
 
 
-def masked_agg_pytree(clients, mask, *, interpret: bool = True):
+def masked_agg_pytree(clients, mask, prev=None, *, interpret: bool = True):
     """FedPBC aggregation over an [m, ...] client-stacked pytree using the
-    masked_agg kernel per (flattened) leaf."""
-    def leaf(x):
+    masked_agg kernel per (flattened) leaf. ``prev`` (a pytree matching the
+    server params) folds the empty-active-set guard into the kernel: a
+    zero-active round returns ``prev`` unchanged instead of a zeroed model."""
+    def leaf(x, pv=None):
         m = x.shape[0]
         flat = x.reshape(m, -1)
-        out = masked_agg(flat, mask, interpret=interpret)
+        pflat = None if pv is None else pv.reshape(-1)
+        out = masked_agg(flat, mask, pflat, interpret=interpret)
         return out.reshape(x.shape[1:]).astype(x.dtype)
-    return jax.tree.map(leaf, clients)
+    if prev is None:
+        return jax.tree.map(leaf, clients)
+    return jax.tree.map(leaf, clients, prev)
 
 
 def gqa_flash_attention(q, k, v, *, causal=True, window=0, logit_softcap=0.0,
@@ -45,6 +69,17 @@ __all__ = [
     "masked_agg",
     "masked_agg_pytree",
     "masked_agg_ref",
+    "fused_masked_agg",
+    "fused_masked_agg_ref",
+    "fused_agg",
+    "fused_agg_pytree",
+    "FUSED_OPS",
+    "OP_MEAN",
+    "OP_ALL",
+    "OP_KNOWN_P",
+    "resolve_backend",
+    "resolve_use_kernel",
+    "use_kernel_default",
     "flash_attention",
     "flash_attention_ref",
     "gqa_flash_attention",

@@ -5,15 +5,50 @@ import jax
 import jax.numpy as jnp
 
 
-def masked_agg_ref(x, mask):
+def masked_agg_ref(x, mask, prev=None):
     """FedPBC server aggregation (Alg. 1 line 11): mean over active clients.
 
     x: [m, n] stacked client parameters; mask: [m] bool/0-1.
     out: [n] = sum_i mask_i x_i / max(1, sum mask).
+
+    ``prev`` ([n], optional) is the previous server params: when given, an
+    empty active set returns ``prev`` (the engine's ``any_active`` guard)
+    instead of the zero vector.
     """
     mask = mask.astype(jnp.float32)
     denom = jnp.maximum(mask.sum(), 1.0)
-    return (x.astype(jnp.float32) * mask[:, None]).sum(0) / denom
+    out = (x.astype(jnp.float32) * mask[:, None]).sum(0) / denom
+    if prev is None:
+        return out
+    return jnp.where(mask.sum() > 0, out, prev.astype(jnp.float32))
+
+
+def fused_masked_agg_ref(x, mask, op, prev, p):
+    """Pure-jnp oracle for the fused family-aggregation kernel — identical
+    math (fp32 accumulation, same weight expressions and select) to
+    ``repro.kernels.masked_agg._fused_kernel``; also the dispatch layer's
+    always-available XLA fallback path.
+
+    Single trajectory: x [m, n], mask [m], op scalar, prev [n], p [m];
+    batched: a leading [B] axis on every argument. Returns fp32 [n] / [B, n].
+    """
+    if x.ndim == 3:
+        return jax.vmap(fused_masked_agg_ref)(x, mask, op, prev, p)
+    from repro.kernels.masked_agg import OP_ALL, OP_MEAN
+
+    m = x.shape[0]
+    xf = x.astype(jnp.float32)
+    mk = mask.astype(jnp.float32)
+    prev = prev.astype(jnp.float32)
+    n_active = mk.sum()
+    mean_agg = (xf * mk[:, None]).sum(0) / jnp.maximum(n_active, 1.0)
+    mean_out = jnp.where(n_active > 0, mean_agg, prev)
+    delta = xf - prev[None]
+    all_out = prev + (delta * (mk / m)[:, None]).sum(0)
+    w_kp = mk / jnp.maximum(p.astype(jnp.float32), 1e-3) / m
+    kp_out = prev + (delta * w_kp[:, None]).sum(0)
+    return jnp.where(op == OP_MEAN, mean_out,
+                     jnp.where(op == OP_ALL, all_out, kp_out))
 
 
 def flash_attention_ref(q, k, v, *, causal=True, window=0, logit_softcap=0.0):
