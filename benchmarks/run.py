@@ -29,6 +29,8 @@ SUITE_INFO = {
                 "+ TPU-target oracles)",
                 ("batched_agg_B8_m32_n1024", "batched_agg_B8_m256_n1024",
                  "batched_agg_B64_m32_n1024", "batched_agg_B64_m256_n1024")),
+    "scale": ("cross-device cohort + buffered aggregation vs client count",
+              ("scale_m1000", "scale_m10000", "scale_m50000")),
 }
 
 
@@ -58,6 +60,7 @@ def main() -> None:
         fig8_ablations,
         kernels_bench,
         roofline,
+        scale,
         sweep_throughput,
         table1_accuracy,
         table2_rounds_to_target,
@@ -75,6 +78,7 @@ def main() -> None:
         "sweep": lambda: sweep_throughput.run(rounds=max(args.rounds // 2, 100)),
         "roofline": lambda: roofline.run(),
         "kernels": lambda: kernels_bench.run(),
+        "scale": lambda: scale.run(rounds=max(args.rounds // 8, 20)),
     }
     assert set(suites) == set(SUITE_INFO)
     if args.only:

@@ -1,0 +1,148 @@
+"""Cross-device scale: cohort-subsampled buffered aggregation vs m.
+
+The acceptance workload of the ``repro.scale`` subsystem: a FedPBC cell at
+m in {1k, 10k, 50k} clients with a C=256 on-device cohort per round and a
+(sync, buffered) strategy pair — ONE compiled program per cell (the
+strategy knobs are traced per-trajectory columns; the compile counter
+asserts it), O(C) per-round client-tensor memory (no ``[m, n_params]``
+intermediate exists anywhere in the cohort round — ``FedState.clients``
+is ``()``).
+
+Per m the bench reports cold (includes the compile) and warm wall time,
+rounds/sec, the buffered arm's commit count and mean per-commit staleness,
+and both arms' final test accuracy. The figure of merit is warm
+rounds/sec vs m: the cohort round's client compute is O(C), so the cost
+should grow far sublinearly in m (the residual O(m) terms are the link
+process and the per-client bookkeeping vectors).
+
+Prints a ``BENCH {...}`` JSON line and writes ``benchmarks/out/scale.json``.
+
+  PYTHONPATH=src python -m benchmarks.scale             # full m ladder
+  PYTHONPATH=src python -m benchmarks.scale --smoke     # m=10k, few rounds
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.experiments import SweepSpec, run_cell_batch
+from repro.experiments.grid import _runner_for, get_traced_task
+from repro.scale import BUFFER_METRIC_KEYS, Strategy
+
+METRIC_KEYS = ("loss", "num_active") + BUFFER_METRIC_KEYS
+SCHEME = "bernoulli_ti"
+
+
+def _spec(m: int, *, cohort: int, rounds: int, seeds) -> SweepSpec:
+    buffered = Strategy("buffered", buffer_size=max(cohort // 2, 1),
+                        deadline_rounds=4)
+    return SweepSpec(
+        algorithms=("fedpbc",), schemes=(SCHEME,), seeds=tuple(seeds),
+        rounds=rounds, eval_every=rounds,        # one in-scan eval at the end
+        num_clients=m, cohort_size=min(cohort, m),
+        strategies=(Strategy("sync_cohort"), buffered),
+        local_steps=2, batch_size=16, dim=32, hidden=32,
+        n_per_class=200, n_train=1600, per_client=32)
+
+
+def _bench_m(m: int, *, cohort: int, rounds: int, seeds) -> dict:
+    spec = _spec(m, cohort=cohort, rounds=rounds, seeds=seeds)
+    C = spec.cohort_size
+
+    t0 = time.perf_counter()
+    cells = run_cell_batch(spec, "fedpbc", SCHEME, metric_keys=METRIC_KEYS,
+                           mesh=None)
+    cold_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    cells = run_cell_batch(spec, "fedpbc", SCHEME, metric_keys=METRIC_KEYS,
+                           mesh=None)
+    warm_s = time.perf_counter() - t0
+
+    fed = spec.cell_config("fedpbc", SCHEME)
+    runner = _runner_for(spec, fed, get_traced_task(spec), METRIC_KEYS)
+    compiles = -1
+    if hasattr(runner.scan_batch, "_cache_size"):
+        compiles = runner.init_batch._cache_size() \
+            + runner.scan_batch._cache_size()
+        # both strategies share ONE (init, scan) pair — the subsystem's
+        # compile contract. RuntimeError (not assert): survives `python -O`
+        if compiles != 2:
+            raise RuntimeError(
+                f"strategy axis recompiled: {compiles} jit entries, "
+                "expected 2 (one init + one scan for the whole cell)")
+
+    sync_c, buf_c = cells
+    commits = np.asarray(buf_c.commit)
+    stale = np.asarray(buf_c.commit_staleness)
+    n_commits = commits.sum(axis=1)
+    mean_stale = float(
+        ((stale * commits).sum(axis=1) / np.maximum(n_commits, 1.0)).mean())
+    n_traj = len(spec.seeds) * len(spec.strategies)
+    return {
+        "m": m,
+        "cohort": C,
+        "rounds": rounds,
+        "n_seeds": len(spec.seeds),
+        "strategies": [s.name for s in spec.strategies],
+        "buffer_size": spec.strategies[1].buffer_size,
+        "deadline_rounds": spec.strategies[1].deadline_rounds,
+        "cold_seconds": round(cold_s, 4),
+        "warm_seconds": round(warm_s, 4),
+        "warm_rounds_per_s": round(n_traj * rounds / warm_s, 2),
+        "compile_entries": compiles,
+        "commits_per_seed": [float(x) for x in n_commits],
+        "mean_commit_staleness": round(mean_stale, 4),
+        "final_test_acc_sync": round(float(sync_c.test_acc[:, -1].mean()), 4),
+        "final_test_acc_buffered":
+            round(float(buf_c.test_acc[:, -1].mean()), 4),
+    }
+
+
+def run(csv=True, *, ms=(1_000, 10_000, 50_000), cohort=256, rounds=30,
+        seeds=(0,), out_path=None):
+    entries = []
+    for m in ms:
+        e = _bench_m(m, cohort=cohort, rounds=rounds, seeds=seeds)
+        if csv:
+            print(f"scale,m={m},C={e['cohort']},warm_s={e['warm_seconds']},"
+                  f"rps={e['warm_rounds_per_s']},"
+                  f"acc_buf={e['final_test_acc_buffered']}", flush=True)
+        entries.append(e)
+    result = {
+        "bench": "scale",
+        "cohort": cohort,
+        "rounds": rounds,
+        "by_m": {f"scale_m{e['m']}": e for e in entries},
+        "backend": jax.default_backend(),
+        "n_devices": len(jax.devices()),
+    }
+    print("BENCH " + json.dumps(result), flush=True)
+    if out_path is None:
+        out_path = os.path.join(os.path.dirname(__file__), "out",
+                                "scale.json")
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(result, f, indent=2)
+    return result
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=30)
+    ap.add_argument("--cohort", type=int, default=256)
+    ap.add_argument("--ms", default="1000,10000,50000",
+                    help="comma-separated client counts")
+    ap.add_argument("--smoke", action="store_true",
+                    help="one fast arm (m=10000, 6 rounds) for CI")
+    a = ap.parse_args()
+    if a.smoke:
+        run(ms=(10_000,), cohort=a.cohort, rounds=6)
+    else:
+        run(ms=tuple(int(x) for x in a.ms.split(",")), cohort=a.cohort,
+            rounds=a.rounds)

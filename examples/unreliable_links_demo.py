@@ -1,8 +1,14 @@
-"""Fig. 5/6 analogue: ASCII traces of the six unreliable-uplink schemes.
+"""Fig. 5/6 analogue: ASCII traces of the six unreliable-uplink schemes —
+plus a cross-device arm: FedPBC at m=10,000 clients with a C=256 on-device
+cohort per round and buffered semi-async aggregation (``repro.scale``).
 
 The whole T-round trace of each scheme is produced by one ``jax.lax.scan``
 over ``link.sample`` — the same device-side pattern the multi-round engine
-uses — instead of T Python-loop dispatches.
+uses — instead of T Python-loop dispatches. The cross-device arm runs the
+real round engine: clients are stateless (``FedState.clients`` is ``()``,
+so no [m, n_params] tensor exists), each round trains only the sampled
+cohort, and the server commits its buffer when it fills or the deadline
+passes.
 
   PYTHONPATH=src python examples/unreliable_links_demo.py
 """
@@ -41,6 +47,44 @@ def trace(link, T: int, key) -> np.ndarray:
     return np.asarray(actives)
 
 
+def cross_device_arm(m=10_000, C=256, rounds=12):
+    """FedPBC over m clients, C-cohort rounds, buffered aggregation."""
+    from repro.core import init_fed_state, make_run_rounds
+    from repro.core.algorithms import make_algorithm_spec
+    from repro.data import fixed_source
+    from repro.optim import sgd
+    from repro.scale import BUFFER_METRIC_KEYS, Strategy
+
+    fed = FederationConfig(algorithm="fedpbc", num_clients=m, local_steps=2)
+    spec = make_algorithm_spec(("fedpbc",), fed)
+    link = make_link_process(jnp.full((m,), 0.5), fed)
+    loss = lambda params, batch: jnp.sum(
+        (params["x"] - batch["u"].mean()) ** 2)
+    opt = sgd(0.05)
+    source = fixed_source({"u": jnp.zeros((m, fed.local_steps, 4))})
+    strat = Strategy("buffered", buffer_size=C // 2, deadline_rounds=3)
+    run = make_run_rounds(loss, opt, spec, link, fed, source,
+                          metric_keys=("loss", "num_active")
+                          + BUFFER_METRIC_KEYS,
+                          donate=False, strategy=strat, cohort_size=C)
+    st = init_fed_state(jax.random.PRNGKey(0), {"x": jnp.ones(8)}, fed,
+                        spec, link, opt, stateless_clients=True,
+                        buffered=True)
+    st, _, mets = run(st, source.init(jax.random.PRNGKey(2)),
+                      jax.random.PRNGKey(3), rounds)
+    print(f"\n== cross-device: fedpbc, m={m:,}, cohort C={C}, "
+          f"buffer={strat.buffer_size}, deadline={strat.deadline_rounds} ==")
+    assert st.clients == ()            # stateless: O(C) round memory
+    commit = np.asarray(mets["commit"])
+    fill = np.asarray(mets["buffer_fill"])
+    for t in range(rounds):
+        bar = "#" * int(fill[t] * 30 / max(fill.max(), 1))
+        mark = " COMMIT" if commit[t] else ""
+        print(f"  round {t:2d} |{bar:<30s}| fill={int(fill[t]):4d}{mark}")
+    print(f"  commits={int(np.asarray(st.buffer.commits))}, "
+          f"final loss={float(np.asarray(mets['loss'])[-1]):.4f}")
+
+
 if __name__ == "__main__":
     for name, kw in SCHEMES:
         fed = FederationConfig(num_clients=len(P), **kw)
@@ -50,3 +94,4 @@ if __name__ == "__main__":
         for i in range(len(P)):
             row = "".join("#" if a else "." for a in actives[:, i])
             print(f"  p={float(P[i]):4.2f} |{row}|")
+    cross_device_arm()

@@ -394,6 +394,40 @@ class AlgorithmSpec:
         from repro.kernels.dispatch import FUSED_OPS
         return all(n in FUSED_OPS for n in self.names)
 
+    def fused_op(self, algo_id) -> tuple:
+        """The fused-branch selectors for a fusable family: ``(op, is_pbc)``
+        where ``op`` is the member's aggregation opcode
+        (``repro.kernels.dispatch.FUSED_OPS``) and ``is_pbc`` marks the
+        postponed-broadcast member. Python scalars for a static ``algo_id``,
+        traced selects otherwise — the shared dispatch of the fused kernel
+        path and the buffered engine (``repro.scale.buffer``)."""
+        from repro.kernels.dispatch import FUSED_OPS
+
+        if _is_static(algo_id):
+            name = self.names[int(algo_id)]
+            return FUSED_OPS[name], name == "fedpbc"
+        op = jnp.asarray([FUSED_OPS[n] for n in self.names],
+                         jnp.int32)[algo_id]
+        is_pbc = jnp.asarray([n == "fedpbc" for n in self.names])[algo_id]
+        return op, is_pbc
+
+    def aggregate_cohort(self, algo_id, algo_state, server, x_star, cohort,
+                         c_active, c_p, t) -> tuple:
+        """Sparse cohort aggregation for a stateful rule: per-client state
+        rows are gathered/scattered at ``cohort`` only
+        (``repro.scale.sparse_state``), so the round touches O(C) state.
+        Stateful families are singletons (unique state signatures), so
+        dispatch is always static. Returns ``(algo_state', server')``."""
+        from repro.scale.sparse_state import cohort_branch
+
+        if not (_is_static(algo_id) or len(self.names) == 1):
+            raise ValueError(
+                "cohort aggregation needs a static algo_id (stateful "
+                f"families are singletons; got a traced id over {self.names})")
+        idx = int(algo_id) if _is_static(algo_id) else 0
+        branch = cohort_branch(self.names[idx], self)
+        return branch(algo_state, server, x_star, cohort, c_active, c_p, t)
+
     def aggregate(self, algo_id, algo_state, server, clients, x_star, active,
                   p_t, t, use_kernel: bool = False) -> tuple:
         if use_kernel and self.fusable:
@@ -416,16 +450,12 @@ class AlgorithmSpec:
         instant for the FedAvg variants). Subsumes the ``lax.switch`` that
         evaluates every branch under vmap; the family's ``algo_state`` is
         empty and passes through untouched."""
-        from repro.kernels.dispatch import FUSED_OPS, fused_agg_pytree
+        from repro.kernels.dispatch import fused_agg_pytree
 
+        op, is_pbc = self.fused_op(algo_id)
         if _is_static(algo_id):
-            name = self.names[int(algo_id)]
-            op = FUSED_OPS[name]
-            bcast = active if name == "fedpbc" else jnp.ones_like(active)
+            bcast = active if is_pbc else jnp.ones_like(active)
         else:
-            op = jnp.asarray([FUSED_OPS[n] for n in self.names],
-                             jnp.int32)[algo_id]
-            is_pbc = jnp.asarray([n == "fedpbc" for n in self.names])[algo_id]
             bcast = active | ~is_pbc
         new_server = fused_agg_pytree(x_star, active, op, server, p_t)
         # fedpbc: only active clients receive the new global model (the

@@ -35,7 +35,9 @@ from repro.configs.base import FederationConfig
 from repro.core.algorithms import (
     Algorithm,
     AlgorithmSpec,
+    _tile,
     as_algorithm,
+    bcast_where,
     make_algorithm,
 )
 from repro.core.connectivity import LinkProcess
@@ -55,19 +57,39 @@ class FedState:
     key: jnp.ndarray
     # staleness bookkeeping (Prop. 2): last round each uplink was active
     last_active: jnp.ndarray  # [m] int32
+    # buffered semi-async aggregation (repro.scale.buffer): a BufferState
+    # in buffered modes, () for the synchronous engine
+    buffer: Pytree = ()
 
 
 def init_fed_state(key, server_params, fed_cfg: FederationConfig,
-                   algorithm, link: LinkProcess, optimizer) -> FedState:
+                   algorithm, link: LinkProcess, optimizer, *,
+                   stateless_clients: bool = False,
+                   buffered: bool = False) -> FedState:
     """``algorithm`` may be an ``Algorithm`` or an ``AlgorithmSpec`` (whose
     unified ``init`` is dispatch-independent: every family member shares one
-    state container)."""
+    state container).
+
+    ``stateless_clients``: cohort (cross-device) mode — no ``[m, ...]``
+    client params / optimizer state is materialized; every sampled client
+    trains from the server model with a fresh optimizer, so per-round
+    client memory is O(C). ``buffered``: thread a ``BufferState``
+    (``repro.scale.buffer``) for the semi-async engine.
+    """
     algorithm = as_algorithm(algorithm)
     m = fed_cfg.num_clients
     k_link, k_state = jax.random.split(key)
-    clients = jax.tree.map(
-        lambda x: jnp.broadcast_to(x, (m,) + x.shape).copy(), server_params)
-    opt_state = jax.vmap(optimizer.init)(clients)
+    if stateless_clients:
+        clients, opt_state = (), ()
+    else:
+        clients = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (m,) + x.shape).copy(),
+            server_params)
+        opt_state = jax.vmap(optimizer.init)(clients)
+    buffer = ()
+    if buffered:
+        from repro.scale.buffer import init_buffer_state
+        buffer = init_buffer_state(server_params, m)
     return FedState(
         server=server_params,
         clients=clients,
@@ -77,6 +99,7 @@ def init_fed_state(key, server_params, fed_cfg: FederationConfig,
         round=jnp.int32(0),
         key=k_state,
         last_active=jnp.full((m,), -1, jnp.int32),
+        buffer=buffer,
     )
 
 
@@ -103,7 +126,8 @@ def local_steps(loss_fn, optimizer, params, opt_state, batches, s: int):
 def make_round_fn(loss_fn: Callable, optimizer, algorithm,
                   link: LinkProcess, fed_cfg: FederationConfig,
                   spmd_axis_name: Optional[str] = None,
-                  algo_id=0, use_kernel: bool = False):
+                  algo_id=0, use_kernel: bool = False,
+                  strategy=None, cohort_size: Optional[int] = None):
     """Build the jit-able round function.
 
     ``algorithm``: an ``Algorithm``, or an ``AlgorithmSpec`` table bound at
@@ -119,7 +143,23 @@ def make_round_fn(loss_fn: Callable, optimizer, algorithm,
     backend-dispatched fused Pallas kernel (``repro.kernels.dispatch``)
     instead of the XLA masked-mean switch. Ignored for an already-bound
     ``Algorithm`` (its aggregation path is baked).
+
+    ``strategy`` / ``cohort_size``: the cross-device scale modes
+    (``repro.scale``). A non-None ``strategy`` (a ``Strategy`` or a traced
+    knob mapping) routes a fusable family's aggregation through the
+    buffered semi-async engine; a non-None ``cohort_size`` makes the round
+    subsample C clients on device (stateless clients, O(C) round memory)
+    and requires a source-aware step (the returned round function carries
+    ``needs_source`` and the signature
+    ``round_fn(state, ds_state, k_data, source)``). Both require an
+    ``AlgorithmSpec`` (the engine needs the family table, not a bound
+    ``Algorithm``). None/None is the historical synchronous trace,
+    untouched.
     """
+    if strategy is not None or cohort_size is not None:
+        return _make_scale_round_fn(loss_fn, optimizer, algorithm, link,
+                                    fed_cfg, spmd_axis_name, algo_id,
+                                    strategy, cohort_size)
     algorithm = as_algorithm(algorithm, algo_id, use_kernel=use_kernel)
     s = fed_cfg.local_steps
 
@@ -143,7 +183,8 @@ def make_round_fn(loss_fn: Callable, optimizer, algorithm,
         new_state = FedState(
             server=server, clients=clients, opt_state=opt_state,
             algo_state=algo_state, link_state=link_state,
-            round=state.round + 1, key=key, last_active=last_active)
+            round=state.round + 1, key=key, last_active=last_active,
+            buffer=state.buffer)
         metrics = {
             "loss": losses.mean(),
             "num_active": active.sum(),
@@ -152,6 +193,146 @@ def make_round_fn(loss_fn: Callable, optimizer, algorithm,
         }
         return new_state, metrics
 
+    return round_fn
+
+
+def _make_scale_round_fn(loss_fn, optimizer, algorithm, link, fed_cfg,
+                         spmd_axis_name, algo_id, strategy, cohort_size):
+    """The cross-device scale round engines (``repro.scale``).
+
+    Dense buffered (``cohort_size is None``): the synchronous round's exact
+    data/key/mask protocol, with the server aggregation routed through the
+    buffered semi-async fold — in the degenerate commit-every-round
+    configuration the trace mirrors the synchronous branches term for term
+    (the bit-for-bit pin in ``tests/test_staleness.py``).
+
+    Cohort (``cohort_size=C``): clients are stateless — a ``[C]`` cohort is
+    drawn per round, only its batches are sampled (``source.sample_cohort``),
+    every sampled client trains from the server model with a fresh
+    optimizer, and aggregation is the buffer engine (fusable family) or the
+    sparse gather/scatter branches (stateful rules). No ``[m, n_params]``
+    client tensor exists anywhere in the round.
+    """
+    from repro.scale.buffer import buffered_aggregate, knobs_of
+    from repro.scale.participation import cohort_arrivals, sample_cohort
+
+    if not isinstance(algorithm, AlgorithmSpec):
+        raise ValueError(
+            "the buffered/cohort round engine needs an AlgorithmSpec (got "
+            f"{type(algorithm).__name__}; bind algo_id via the algo_id "
+            "argument instead)")
+    spec = algorithm
+    m = fed_cfg.num_clients
+    buffered = spec.fusable  # stateful rules take the sparse cohort path
+    if strategy is not None and not buffered:
+        raise ValueError(
+            f"buffered strategies cover the empty-state family only; "
+            f"{spec.names} keeps per-client state (use the synchronous or "
+            "cohort path)")
+    knobs = knobs_of(strategy)
+    if buffered:
+        op, is_pbc = spec.fused_op(algo_id)
+    bound = as_algorithm(spec, algo_id)
+    run = partial(local_steps, loss_fn, optimizer, s=fed_cfg.local_steps)
+
+    def commit_clients(commit, in_buffer, server, x_star):
+        """Postponed broadcast at commit time: fedpbc's new global model
+        reaches exactly the buffered contributors; other members broadcast
+        to every row present. Between commits nobody moves."""
+        if isinstance(is_pbc, bool):
+            bcast = in_buffer if is_pbc else jnp.ones_like(in_buffer)
+        else:
+            bcast = jnp.where(is_pbc, in_buffer, jnp.ones_like(in_buffer))
+        committed = bcast_where(bcast, server, x_star)
+        return jax.tree.map(
+            lambda c, x: jnp.where(commit, c, x), committed, x_star)
+
+    if cohort_size is None:
+        def round_fn(state: FedState, batches) -> tuple:
+            key, k_link = jax.random.split(state.key)
+            active, p_t, link_state = link.sample(
+                state.link_state, state.round, k_link)
+            starts = bound.client_start(
+                state.algo_state, state.server, state.clients)
+            x_star, opt_state, losses = jax.vmap(
+                run, spmd_axis_name=spmd_axis_name)(
+                starts, state.opt_state, batches)
+            in_buffer = state.buffer.in_buffer | active
+            buf, server, commit, bmets = buffered_aggregate(
+                state.buffer, state.server, x_star, active, p_t, knobs,
+                op=op, m_total=m, in_buffer_new=in_buffer)
+            clients = commit_clients(commit, in_buffer, server, x_star)
+            last_active = jnp.where(active, state.round, state.last_active)
+            new_state = FedState(
+                server=server, clients=clients, opt_state=opt_state,
+                algo_state=state.algo_state, link_state=link_state,
+                round=state.round + 1, key=key, last_active=last_active,
+                buffer=buf)
+            metrics = {
+                "loss": losses.mean(),
+                "num_active": active.sum(),
+                "active": active,
+                "staleness": (state.round
+                              - state.last_active).astype(jnp.float32),
+                **bmets,
+            }
+            return new_state, metrics
+
+        return round_fn
+
+    C = cohort_size
+
+    def round_fn(state: FedState, ds_state, k_data, source) -> tuple:
+        if source.sample_cohort is None:
+            raise ValueError(
+                f"cohort mode needs a DataSource with sample_cohort "
+                f"(source {source.name!r} has none)")
+        key, k_link, k_cohort = jax.random.split(state.key, 3)
+        # the link advances over the FULL population (Markov chains etc.
+        # keep their dense-time semantics); the cohort sees its gather
+        active_m, p_t_m, link_state = link.sample(
+            state.link_state, state.round, k_link)
+        cohort = sample_cohort(k_cohort, m, C)
+        c_active, c_p = cohort_arrivals(cohort, active_m, p_t_m)
+        batches, ds_state = source.sample_cohort(
+            ds_state, state.round, k_data, cohort)
+        starts = _tile(state.server, C)
+        opt_state = jax.vmap(optimizer.init)(starts)
+        x_star, _, losses = jax.vmap(run, spmd_axis_name=spmd_axis_name)(
+            starts, opt_state, batches)
+        if buffered:
+            in_buffer = state.buffer.in_buffer.at[cohort].set(
+                state.buffer.in_buffer[cohort] | c_active)
+            buf, server, commit, bmets = buffered_aggregate(
+                state.buffer, state.server, x_star, c_active, c_p, knobs,
+                op=op, m_total=C, in_buffer_new=in_buffer)
+            algo_state = state.algo_state
+        else:
+            algo_state, server = spec.aggregate_cohort(
+                algo_id, state.algo_state, state.server, x_star, cohort,
+                c_active, c_p, state.round)
+            buf = state.buffer
+            bmets = {"commit": jnp.float32(1.0),
+                     "buffer_fill": c_active.sum().astype(jnp.float32),
+                     "commit_staleness": jnp.float32(0.0)}
+        last_active = state.last_active.at[cohort].set(
+            jnp.where(c_active, state.round, state.last_active[cohort]))
+        new_state = FedState(
+            server=server, clients=(), opt_state=(),
+            algo_state=algo_state, link_state=link_state,
+            round=state.round + 1, key=key, last_active=last_active,
+            buffer=buf)
+        metrics = {
+            "loss": losses.mean(),
+            "num_active": c_active.sum(),
+            "active": c_active,
+            "staleness": (state.round
+                          - state.last_active).astype(jnp.float32),
+            **bmets,
+        }
+        return new_state, ds_state, metrics
+
+    round_fn.needs_source = True
     return round_fn
 
 
@@ -173,6 +354,15 @@ def make_round_step(round_fn, source):
     Returns ``step(state, ds_state, data_key) -> (state, ds_state, metrics)``.
     """
 
+    if getattr(round_fn, "needs_source", False):
+        # cohort engine: the round draws its own cohort and samples only
+        # that cohort's batches, so it needs the source inside
+        def step(state: FedState, ds_state, data_key):
+            k_data = jax.random.fold_in(data_key, state.round)
+            return round_fn(state, ds_state, k_data, source)
+
+        return step
+
     def step(state: FedState, ds_state, data_key):
         k_data = jax.random.fold_in(data_key, state.round)
         batches, ds_state = source.sample(ds_state, state.round, k_data)
@@ -187,12 +377,16 @@ def make_run_rounds(loss_fn: Callable, optimizer, algorithm,
                     spmd_axis_name: Optional[str] = None,
                     metric_keys=DEFAULT_METRIC_KEYS,
                     donate: Optional[bool] = None,
-                    algo_id=0, use_kernel: bool = False):
+                    algo_id=0, use_kernel: bool = False,
+                    strategy=None, cohort_size: Optional[int] = None):
     """Build the scanned multi-round entry point.
 
     ``algorithm`` may be an ``AlgorithmSpec`` table bound at ``algo_id``
     with the aggregation path picked by ``use_kernel`` (see
-    ``make_round_fn``).
+    ``make_round_fn``). ``strategy``/``cohort_size`` select the
+    cross-device scale engines (``repro.scale``; see ``make_round_fn``) —
+    in those modes the state must come from ``init_fed_state`` with the
+    matching ``buffered``/``stateless_clients`` flags.
 
     Returns ``run_rounds(state, ds_state, data_key, num_rounds)`` →
     ``(state', ds_state', metrics)`` where every entry of ``metrics`` is a
@@ -205,7 +399,8 @@ def make_run_rounds(loss_fn: Callable, optimizer, algorithm,
     """
     round_fn = make_round_fn(loss_fn, optimizer, algorithm, link, fed_cfg,
                              spmd_axis_name, algo_id=algo_id,
-                             use_kernel=use_kernel)
+                             use_kernel=use_kernel, strategy=strategy,
+                             cohort_size=cohort_size)
     step = make_round_step(round_fn, source)
     if donate is None:
         donate = jax.default_backend() != "cpu"  # CPU ignores donation noisily
@@ -258,6 +453,6 @@ def run_rounds_loop(state: FedState, ds_state, data_key, num_rounds: int, *,
 jax.tree_util.register_dataclass(
     FedState,
     data_fields=["server", "clients", "opt_state", "algo_state", "link_state",
-                 "round", "key", "last_active"],
+                 "round", "key", "last_active", "buffer"],
     meta_fields=[],
 )

@@ -33,6 +33,11 @@ class DataSource:
     init: Callable[..., Any]      # (key) -> ds_state
     sample: Callable[..., Any]    # (ds_state, round, key) -> (batches, ds_state)
     name: str = ""
+    # cohort mode (repro.scale): (ds_state, round, key, cohort [C] int32) ->
+    # ([C, s, ...] batches, ds_state) — only the sampled clients' batches are
+    # materialized, so per-round data memory is O(C) not O(m). With
+    # cohort = arange(m) the draw is bit-for-bit the dense ``sample``.
+    sample_cohort: Optional[Callable[..., Any]] = None
 
 
 def classification_source(x, y, client_idx, *, local_steps: int,
@@ -58,7 +63,14 @@ def classification_source(x, y, client_idx, *, local_steps: int,
         sel = client_idx[jnp.arange(m)[:, None, None], pick]
         return {"x": x[sel], "y": y[sel]}, ds_state
 
-    return DataSource(init, sample, "classification")
+    def sample_cohort(ds_state, t, key, cohort):
+        C = cohort.shape[0]
+        pick = jax.random.randint(
+            key, (C, local_steps, batch_size), 0, per_client)
+        sel = client_idx[cohort[:, None, None], pick]
+        return {"x": x[sel], "y": y[sel]}, ds_state
+
+    return DataSource(init, sample, "classification", sample_cohort)
 
 
 def traced_classification_source(shared, *, local_steps: int,
@@ -90,7 +102,16 @@ def traced_classification_source(shared, *, local_steps: int,
         sel = client_idx[jnp.arange(m)[:, None, None], pick]
         return {"x": shared["x"][sel], "y": shared["y"][sel]}, ds_state
 
-    return DataSource(init, sample, "classification_traced")
+    def sample_cohort(ds_state, t, key, cohort):
+        client_idx = ds_state["idx"]
+        per_client = client_idx.shape[1]
+        C = cohort.shape[0]
+        pick = jax.random.randint(
+            key, (C, local_steps, batch_size), 0, per_client)
+        sel = client_idx[cohort[:, None, None], pick]
+        return {"x": shared["x"][sel], "y": shared["y"][sel]}, ds_state
+
+    return DataSource(init, sample, "classification_traced", sample_cohort)
 
 
 def lm_source(*, num_clients: int, local_steps: int, batch: int, seq: int,
@@ -119,7 +140,17 @@ def lm_source(*, num_clients: int, local_steps: int, batch: int, seq: int,
             batches["memory"] = 0.1 * jnp.ones((m, s) + tuple(memory_shape))
         return batches, ds_state
 
-    return DataSource(init, sample, "lm")
+    def sample_cohort(ds_state, t, key, cohort):
+        C = cohort.shape[0]
+        toks = ds_state["lo"][cohort][:, None, None, None] + jax.random.randint(
+            key, (C, s, batch, seq), 0, vocab // 2)
+        toks = toks.astype(jnp.int32)
+        batches = {"tokens": toks, "labels": jnp.roll(toks, -1, axis=-1)}
+        if memory_shape is not None:
+            batches["memory"] = 0.1 * jnp.ones((C, s) + tuple(memory_shape))
+        return batches, ds_state
+
+    return DataSource(init, sample, "lm", sample_cohort)
 
 
 def fixed_source(batches: Pytree) -> DataSource:
@@ -133,4 +164,7 @@ def fixed_source(batches: Pytree) -> DataSource:
     def sample(ds_state, t, key):
         return batches, ds_state
 
-    return DataSource(init, sample, "fixed")
+    def sample_cohort(ds_state, t, key, cohort):
+        return jax.tree.map(lambda b: b[cohort], batches), ds_state
+
+    return DataSource(init, sample, "fixed", sample_cohort)

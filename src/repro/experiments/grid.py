@@ -50,8 +50,14 @@ from repro.core.algorithms import (
     make_algorithm_spec,
 )
 from repro.core.connectivity import build_base_probs, make_link_process
-from repro.kernels.dispatch import resolve_use_kernel
-from repro.experiments.results import ResultsStore, summarize
+from repro.kernels.dispatch import FUSED_OPS, resolve_use_kernel
+from repro.experiments.results import ResultsStore, buffered_summary, summarize
+from repro.scale.buffer import (
+    SYNC,
+    Strategy,
+    strategy_knob_columns,
+)
+from repro.scale.buffer import BUFFER_METRIC_KEYS as _BUFFER_KEYS
 from repro.experiments.shard import (
     AUTO,
     pad_batch,
@@ -146,6 +152,12 @@ class SweepSpec:
     # traced programs); results match within the documented per-backend
     # tolerance (bitwise on CPU fp32 — tests/test_kernel_sweep.py).
     use_kernel: Optional[bool] = None
+    # cross-device scale axes (repro.scale): the buffered semi-async
+    # strategy axis — one more traced batched dimension of the compiled
+    # cell program, (SYNC,) is the historical synchronous engine — and the
+    # per-round cohort size C (None: all m clients materialize densely)
+    strategies: Tuple[Strategy, ...] = (SYNC,)
+    cohort_size: Optional[int] = None
     # extra FederationConfig field overrides, applied last (e.g.
     # (("fedau_K", 100), ("period", 20)))
     fed_overrides: Tuple[Tuple[str, Any], ...] = ()
@@ -172,6 +184,52 @@ class SweepSpec:
             raise ValueError(
                 f"SweepSpec.schemes contains unknown schemes {unknown}; "
                 f"available: {sorted(SCHEMES)}")
+        if not self.strategies:
+            raise ValueError(
+                "SweepSpec.strategies is empty; give at least one Strategy "
+                "(repro.scale.SYNC is the synchronous default)")
+        bad = [s for s in self.strategies if not isinstance(s, Strategy)]
+        if bad:
+            raise ValueError(
+                f"SweepSpec.strategies entries must be repro.scale.Strategy, "
+                f"got {[type(s).__name__ for s in bad]}")
+        names = [s.name for s in self.strategies]
+        if len(set(names)) != len(names):
+            dupes = sorted({n for n in names if names.count(n) > 1})
+            raise ValueError(
+                f"SweepSpec.strategies contains duplicate names {dupes}: "
+                f"each strategy is one independent grid coordinate")
+        if self.cohort_size is not None \
+                and not 1 <= self.cohort_size <= self.num_clients:
+            raise ValueError(
+                f"SweepSpec.cohort_size={self.cohort_size} must be in "
+                f"[1, num_clients={self.num_clients}]")
+        pop = self.cohort_size if self.cohort_size is not None \
+            else self.num_clients
+        for s in self.strategies:
+            if not 1 <= s.buffer_size <= pop:
+                raise ValueError(
+                    f"SweepSpec.strategies[{s.name!r}].buffer_size="
+                    f"{s.buffer_size} must be in [1, {pop}] (at most the "
+                    f"{'cohort size' if self.cohort_size else 'client count'}"
+                    f" — a larger buffer could never fill)")
+            if s.deadline_rounds < 1:
+                raise ValueError(
+                    f"SweepSpec.strategies[{s.name!r}].deadline_rounds="
+                    f"{s.deadline_rounds} must be >= 1 (the buffer commits "
+                    f"at a round boundary at the earliest)")
+            if not 0.0 <= s.staleness_discount < 1.0:
+                raise ValueError(
+                    f"SweepSpec.strategies[{s.name!r}].staleness_discount="
+                    f"{s.staleness_discount} must be in [0, 1)")
+        if self.strategies != (SYNC,):
+            stateful = [a for a in self.algorithms if a not in FUSED_OPS]
+            if stateful:
+                raise ValueError(
+                    f"SweepSpec.strategies has buffered entries but "
+                    f"algorithms {stateful} keep per-client state; buffered "
+                    f"semi-async aggregation covers the empty-state family "
+                    f"{sorted(FUSED_OPS)} only")
 
     def hparam_points(self) -> List[Dict[str, float]]:
         """The flattened hyperparameter grid: one dict per point, in
@@ -222,6 +280,13 @@ class CellResult:
     num_active: np.ndarray          # [S, K] active-client counts
     # the point's coordinates on the swept axes (lr/gamma/alpha/sigma0/delta)
     hparams: Dict[str, float] = field(default_factory=dict)
+    # the row's strategy-axis coordinate ("sync" = the synchronous engine)
+    strategy: str = "sync"
+    # population the participation summary normalizes by (0: unknown/legacy)
+    num_clients: int = 0
+    # buffered-mode per-round traces (None for synchronous cells)
+    commit: Optional[np.ndarray] = None             # [S, K] commit indicator
+    commit_staleness: Optional[np.ndarray] = None   # [S, K] mean buffer age
 
     def final_test(self, window: int = 3) -> np.ndarray:
         """Per-seed mean test accuracy over the last ``window`` evals (the
@@ -230,8 +295,16 @@ class CellResult:
         return self.test_acc[:, -w:].mean(axis=1)
 
     def summary(self) -> Dict[str, Dict[str, float]]:
-        return {"test_acc": summarize(self.final_test()),
-                "train_acc": summarize(self.train_acc)}
+        out = {"test_acc": summarize(self.final_test()),
+               "train_acc": summarize(self.train_acc)}
+        if self.num_clients and self.num_active.size:
+            # mean per-round participation rate (of the materialized
+            # population: m dense, C in cohort mode)
+            out["participation"] = summarize(
+                self.num_active.mean(axis=1) / self.num_clients)
+        if self.commit is not None and self.commit.size:
+            out.update(buffered_summary(self.commit, self.commit_staleness))
+        return out
 
 
 # --------------------------------------------------------------------------
@@ -286,6 +359,15 @@ def get_partition(spec: SweepSpec, alpha: float) -> np.ndarray:
     return _PARTITION_CACHE[key]
 
 
+def _has_strategy_axis(spec: SweepSpec) -> bool:
+    """Whether the spec runs the buffered engine: any strategy besides the
+    bare synchronous default. (SYNC,) keeps the historical program — note a
+    single non-sync strategy, or even (SYNC, buffered), flips the WHOLE
+    cell onto the buffered trace; the degenerate SYNC knobs there reproduce
+    the synchronous results bit-for-bit (tests/test_staleness.py)."""
+    return spec.strategies != (SYNC,)
+
+
 def _runner_for(spec: SweepSpec, fed: FederationConfig, task,
                 metric_keys) -> Any:
     # Everything swept reaches the compiled program through traced inputs —
@@ -307,8 +389,11 @@ def _runner_for(spec: SweepSpec, fed: FederationConfig, task,
     # sweep the value is constant, so a whole grid still compiles each
     # (family, scheme) stage pair exactly once.
     use_kernel = resolve_use_kernel(spec.use_kernel)
+    # the scale modes are distinct traced programs: cohort size changes
+    # every client-axis shape, buffered threads a BufferState + knob inputs
+    buffered = _has_strategy_axis(spec)
     key = (_task_key(spec), canon, spec.rounds, spec.eval_every,
-           tuple(metric_keys), use_kernel)
+           tuple(metric_keys), use_kernel, spec.cohort_size, buffered)
     if key not in _RUNNER_CACHE:
         algo = make_algorithm_spec(family, fed)
         _RUNNER_CACHE[key] = make_batched_run_rounds(
@@ -322,7 +407,9 @@ def _runner_for(spec: SweepSpec, fed: FederationConfig, task,
             eval_every=spec.eval_every,
             eval_fn=task.eval_test,
             metric_keys=metric_keys,
-            use_kernel=use_kernel)
+            use_kernel=use_kernel,
+            cohort_size=spec.cohort_size,
+            buffered=buffered)
     return _RUNNER_CACHE[key]
 
 
@@ -351,7 +438,7 @@ def _batch_key(spec: SweepSpec) -> tuple:
     shape, seed set, hyperparameter points). ONE definition shared by the
     host-side ``_BATCH_CACHE`` and the device-side ``_SHARDED_BATCH_CACHE``
     so the two can never desync on a future spec field."""
-    return (_task_key(spec), spec.seeds,
+    return (_task_key(spec), spec.seeds, spec.strategies, spec.cohort_size,
             tuple(tuple(sorted(pt.items())) for pt in spec.hparam_points()))
 
 
@@ -450,14 +537,18 @@ def _sharded_cell_batch(spec: SweepSpec, fed: FederationConfig,
 def make_cell_batch(spec: SweepSpec, fed: FederationConfig,
                     task: TracedClassificationTask,
                     algos: Optional[Tuple[str, ...]] = None) -> CellBatch:
-    """Flatten (algorithm x hyperparameter point x seed) into one
-    [B]-leading batch, algo-major then point-major:
-    ``b = (algo_index * n_points + point_index) * len(seeds) + seed_index``.
+    """Flatten (algorithm x strategy x hyperparameter point x seed) into one
+    [B]-leading batch, algo-major, then strategy-major, then point-major:
+    ``b = ((algo_index * n_strategies + strategy_index) * n_points
+    + point_index) * len(seeds) + seed_index`` (without a strategy axis,
+    n_strategies == 1 and the historical layout is unchanged).
 
     ``algos`` (default: just ``fed.algorithm``) must all belong to one
     state-compatible family; the batch's ``algo_id`` column carries each
     trajectory's index into that family's canonical ``AlgorithmSpec`` table,
-    so the same compiled family runner serves any subset."""
+    so the same compiled family runner serves any subset. With a strategy
+    axis (``_has_strategy_axis``), the per-trajectory buffer knobs travel
+    as four more traced hparam columns."""
     if algos is None:
         algos = (fed.algorithm,)
     family = algo_family(algos[0])
@@ -468,14 +559,25 @@ def make_cell_batch(spec: SweepSpec, fed: FederationConfig,
             f"(family {family}); run them as separate cells")
     ids = [family.index(a) for a in algos]
     keys, p_base, lr, gamma, idx = _batch_parts(spec)
+    knobs: Dict[str, jnp.ndarray] = {}
+    if _has_strategy_axis(spec):
+        n_str = len(spec.strategies)
+        rep_s = lambda x: jnp.concatenate([x] * n_str)
+        keys = jax.tree.map(rep_s, keys)
+        p_base, lr, gamma, idx = (rep_s(p_base), rep_s(lr), rep_s(gamma),
+                                  rep_s(idx))
+        knobs = strategy_knob_columns(spec.strategies,
+                                      lr.shape[0] // n_str)
     if len(algos) > 1:
         rep = lambda x: jnp.concatenate([x] * len(algos))
         keys = jax.tree.map(rep, keys)
         p_base, lr, gamma, idx = rep(p_base), rep(lr), rep(gamma), rep(idx)
+        knobs = {k: rep(v) for k, v in knobs.items()}
     hparams = {
         "lr": lr,
         "gamma": gamma,
         "period": jnp.full((lr.shape[0],), float(fed.period), jnp.float32),
+        **knobs,
     }
     block = lr.shape[0] // len(algos)
     algo_id = jnp.asarray(np.repeat(ids, block), jnp.int32)
@@ -491,6 +593,10 @@ def _run_batch(spec: SweepSpec, algos: Tuple[str, ...], scheme: str, *,
     ``CellResult`` rows algo-major, point-major."""
     task = get_traced_task(spec)
     fed = spec.cell_config(algos[0], scheme)
+    buffered = _has_strategy_axis(spec)
+    if buffered:
+        metric_keys = tuple(metric_keys) + tuple(
+            k for k in _BUFFER_KEYS if k not in metric_keys)
     runner = _runner_for(spec, fed, task, metric_keys)
     batch_mesh = resolve_batch_mesh(mesh, devices)
     if batch_mesh is not None:
@@ -517,22 +623,38 @@ def _run_batch(spec: SweepSpec, algos: Tuple[str, ...], scheme: str, *,
     train_acc = np.asarray(jax.vmap(task.eval_train, in_axes=(0, None))(
         states.server, task.shared))
     mets = {k: np.asarray(v) for k, v in out["metrics"].items()}
-    B = len(algos) * len(points) * S
+    strategies = spec.strategies
+    n_str = len(strategies)
+    B = len(algos) * n_str * len(points) * S
+    # the per-round population the participation summary normalizes by
+    pop = spec.cohort_size if spec.cohort_size is not None \
+        else spec.num_clients
 
-    def rows(a, ai, pi):
-        lo = (ai * len(points) + pi) * S
+    def rows(a, ai, si, pi):
+        lo = ((ai * n_str + si) * len(points) + pi) * S
         return a[lo:lo + S]
 
     return [
         CellResult(
             algo=algo, scheme=scheme, seeds=tuple(spec.seeds),
             rounds=spec.rounds, eval_rounds=rounds_at,
-            test_acc=rows(test_acc, ai, pi),
-            train_acc=rows(train_acc, ai, pi),
-            loss=rows(mets.get("loss", np.zeros((B, 0))), ai, pi),
-            num_active=rows(mets.get("num_active", np.zeros((B, 0))), ai, pi),
-            hparams=dict(pt))
+            test_acc=rows(test_acc, ai, si, pi),
+            train_acc=rows(train_acc, ai, si, pi),
+            loss=rows(mets.get("loss", np.zeros((B, 0))), ai, si, pi),
+            num_active=rows(mets.get("num_active", np.zeros((B, 0))),
+                            ai, si, pi),
+            hparams=dict(pt),
+            strategy=strat.name,
+            # plain dense synchronous cells keep the historical two-key
+            # summary; participation only appears where it is informative
+            # (cohort mode normalizes by C, buffered rows by the buffer pool)
+            num_clients=(pop if (strat.name != "sync"
+                                 or spec.cohort_size is not None) else 0),
+            commit=(rows(mets["commit"], ai, si, pi) if buffered else None),
+            commit_staleness=(rows(mets["commit_staleness"], ai, si, pi)
+                              if buffered else None))
         for ai, algo in enumerate(algos)
+        for si, strat in enumerate(strategies)
         for pi, pt in enumerate(points)]
 
 
@@ -563,11 +685,11 @@ def run_cell(spec: SweepSpec, algo: str, scheme: str, *,
              metric_keys=("loss", "num_active"),
              mesh=AUTO, devices=None) -> CellResult:
     """Single-point convenience wrapper around ``run_cell_batch``."""
-    n_points = len(spec.hparam_points())
+    n_points = len(spec.hparam_points()) * len(spec.strategies)
     if n_points != 1:       # before compiling/running anything
         raise ValueError(
-            f"spec has {n_points} hyperparameter points; use "
-            f"run_cell_batch for swept axes")
+            f"spec has {n_points} hyperparameter points x strategy rows; "
+            f"use run_cell_batch for swept axes")
     return run_cell_batch(spec, algo, scheme, metric_keys=metric_keys,
                           mesh=mesh, devices=devices)[0]
 
@@ -597,25 +719,30 @@ def run_sweep(spec: SweepSpec, *, store: Optional[ResultsStore] = None,
         for algo in dict.fromkeys(spec.algorithms):   # unique, in order
             groups.setdefault(algo_family(algo), []).append(algo)
         by_algo: Dict[str, List[CellResult]] = {}
-        n_points = len(spec.hparam_points())
+        n_points = len(spec.hparam_points()) * len(spec.strategies)
         pending = list(spec.algorithms)     # emission order (per occurrence)
 
         def emit(algo):
             for cell in by_algo[algo]:
                 cells.append(cell)
                 if store is not None:
+                    arrays = {"test_acc": cell.test_acc,
+                              "train_acc": cell.train_acc,
+                              "loss": cell.loss,
+                              "num_active": cell.num_active}
+                    if cell.commit is not None:
+                        arrays["commit"] = cell.commit
+                        arrays["commit_staleness"] = cell.commit_staleness
                     store.append(
                         {"suite": suite, "algo": algo, "scheme": scheme,
+                         "strategy": cell.strategy,
                          "seeds": list(spec.seeds), "rounds": spec.rounds,
                          "eval_every": spec.eval_every,
                          "hparams": dict(cell.hparams),
                          "spec": dataclasses.asdict(spec),
                          "eval_rounds": cell.eval_rounds,
                          "summary": cell.summary()},
-                        arrays={"test_acc": cell.test_acc,
-                                "train_acc": cell.train_acc,
-                                "loss": cell.loss,
-                                "num_active": cell.num_active})
+                        arrays=arrays)
 
         # groups run in first-appearance order; completed results are emitted
         # (and PERSISTED) as soon as spec order allows, so a crash in a later

@@ -36,8 +36,9 @@ def _curve_key(record: Dict[str, Any]) -> tuple:
     """Curve identity: ``cell_key`` minus the seed set, so records of
     different seed batches pool along the seed axis while every
     protocol-distinguishing field still separates curves."""
-    suite, algo, scheme, _seeds, rounds, ee, hp, proto = cell_key(record)
-    return (suite, algo, scheme, rounds, ee, hp, proto)
+    (suite, algo, scheme, strategy, _seeds, rounds, ee, hp,
+     proto) = cell_key(record)
+    return (suite, algo, scheme, strategy, rounds, ee, hp, proto)
 
 
 def _slug(key: tuple) -> str:
@@ -47,8 +48,13 @@ def _slug(key: tuple) -> str:
     the eye), and the EXACT hparam + protocol values are folded into a short
     digest suffix so curves differing only beyond display precision (e.g.
     logspace-generated lrs) still get distinct files."""
-    suite, algo, scheme, rounds, ee, hp, proto = key
-    parts = [str(suite), str(algo), str(scheme), f"r{rounds}", f"e{ee}"]
+    suite, algo, scheme, strategy, rounds, ee, hp, proto = key
+    parts = [str(suite), str(algo), str(scheme)]
+    # synchronous cells keep their historical filenames; buffered-strategy
+    # curves get the strategy name as one more distinguishing part
+    if strategy != "sync":
+        parts.append(str(strategy))
+    parts += [f"r{rounds}", f"e{ee}"]
     parts += [f"{k}{v:g}" for k, v in hp]
     if hp or proto:
         parts.append(

@@ -56,12 +56,31 @@ def summarize(values, confidence: str = "ci95") -> Dict[str, float]:
     return {"mean": mean, "std": std, "n": n, confidence: half}
 
 
+def buffered_summary(commit: np.ndarray,
+                     commit_staleness: np.ndarray) -> Dict[str, Any]:
+    """Per-seed summaries of a buffered cell's commit trace.
+
+    ``commit [S, K]`` is the per-round commit indicator (0/1), and
+    ``commit_staleness [S, K]`` the mean buffered-contribution age at each
+    commit (0 on non-commit rounds). Returns ``commits`` (commits per
+    trajectory) and ``commit_staleness`` (per-seed commit-weighted mean age)
+    summarized over seeds — the staleness/participation fields the sweep
+    store records for buffered strategies.
+    """
+    commit = np.asarray(commit, np.float64)
+    stale = np.asarray(commit_staleness, np.float64)
+    n_commits = commit.sum(axis=1)
+    mean_stale = (stale * commit).sum(axis=1) / np.maximum(n_commits, 1.0)
+    return {"commits": summarize(n_commits),
+            "commit_staleness": summarize(mean_stale)}
+
+
 # SweepSpec fields (beyond rounds/eval_every, recorded top-level) that change
 # what a cell measures; folded into cell_key from the record's "spec" dict so
 # e.g. an m=32 run never deduplicates against an m=100 run of the same suite.
 _PROTOCOL_FIELDS = ("num_clients", "local_steps", "batch_size", "data_seed",
                     "dim", "classes", "hidden", "n_per_class", "n_train",
-                    "per_client", "fed_overrides")
+                    "per_client", "fed_overrides", "cohort_size")
 
 
 def _hashable(v):
@@ -87,6 +106,9 @@ def cell_key(record: Dict[str, Any]) -> tuple:
         hp = {f: spec[f] for f in ("lr", "gamma", "alpha", "sigma0", "delta")
               if f in spec}
     return (record.get("suite"), record.get("algo"), record.get("scheme"),
+            # strategy-axis coordinate; records predating the axis carry no
+            # field and normalize to "sync" (they ARE synchronous cells)
+            record.get("strategy") or "sync",
             _hashable(record.get("seeds")), record.get("rounds"),
             record.get("eval_every"),
             tuple(sorted((k, _hashable(v)) for k, v in hp.items())),

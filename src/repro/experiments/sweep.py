@@ -64,6 +64,7 @@ from repro.core.federated import (
     make_round_step,
 )
 from repro.data.sources import DataSource
+from repro.scale.buffer import STRATEGY_KNOB_FIELDS
 
 Pytree = Any
 
@@ -129,7 +130,9 @@ def make_batched_run_rounds(loss_fn: Callable, algorithm,
                             eval_every: int = 0,
                             eval_fn: Optional[Callable] = None,
                             metric_keys=DEFAULT_METRIC_KEYS,
-                            use_kernel: bool = False):
+                            use_kernel: bool = False,
+                            cohort_size: Optional[int] = None,
+                            buffered: bool = False):
     """Build the jitted B-trajectory runner for one grid cell.
 
     Args:
@@ -165,6 +168,14 @@ def make_batched_run_rounds(loss_fn: Callable, algorithm,
         the per-backend tolerance contract. The traced program shape is
         unchanged — one compiled (init, scan) pair still serves the whole
         family.
+      cohort_size / buffered: the cross-device scale modes (``repro.scale``),
+        requiring an ``AlgorithmSpec``. ``cohort_size=C`` subsamples C
+        clients per round on device (stateless clients, O(C) round memory).
+        ``buffered=True`` routes a fusable family's aggregation through the
+        buffered semi-async engine, reading the per-trajectory strategy
+        knobs (``repro.scale.STRATEGY_KNOB_FIELDS``) from ``hparams`` — the
+        strategy axis is one more traced batched dimension, zero extra
+        compiles.
 
     Returns ``run(batch: CellBatch) -> (states, out)`` where ``states`` is a
     [B]-batched ``FedState`` and ``out["metrics"]`` maps each metric key to a
@@ -185,6 +196,15 @@ def make_batched_run_rounds(loss_fn: Callable, algorithm,
     """
     do_eval = eval_fn is not None and eval_every > 0
     n_chunks, rem = divmod(num_rounds, eval_every) if do_eval else (0, num_rounds)
+    scale_mode = buffered or cohort_size is not None
+    if scale_mode and not isinstance(algorithm, AlgorithmSpec):
+        raise ValueError(
+            "cohort_size/buffered need an AlgorithmSpec runner (got "
+            f"{type(algorithm).__name__})")
+    # stateful rules take the sparse cohort path; only fusable families
+    # thread a BufferState
+    has_buffer = scale_mode and isinstance(algorithm, AlgorithmSpec) \
+        and algorithm.fusable
 
     def _bound(algo_id):
         """Resolve the per-trajectory dispatch: a traced ``algo_id`` scalar
@@ -201,15 +221,28 @@ def make_batched_run_rounds(loss_fn: Callable, algorithm,
         source = source_factory(shared)
         params = init_params(keys["params"])
         st = init_fed_state(keys["state"], params, fed_cfg, algo, link,
-                            optimizer)
+                            optimizer,
+                            stateless_clients=cohort_size is not None,
+                            buffered=has_buffer)
         return st, source.init(keys["ds"], data)
 
     def scan_point(st, ds, data_key, p_base, hparams, shared, algo_id):
-        algo = _bound(algo_id)
         optimizer = optimizer_factory(hparams)
         link = link_factory(p_base, hparams)
         source = source_factory(shared)
-        round_fn = make_round_fn(loss_fn, optimizer, algo, link, fed_cfg)
+        if scale_mode:
+            # the scale engines dispatch the spec themselves (they need the
+            # family table, not a bound Algorithm)
+            aid = 0 if (isinstance(algo_id, tuple) and algo_id == ()) \
+                else algo_id
+            strat = ({k: hparams[k] for k in STRATEGY_KNOB_FIELDS}
+                     if buffered else None)
+            round_fn = make_round_fn(loss_fn, optimizer, algorithm, link,
+                                     fed_cfg, algo_id=aid, strategy=strat,
+                                     cohort_size=cohort_size)
+        else:
+            round_fn = make_round_fn(loss_fn, optimizer, _bound(algo_id),
+                                     link, fed_cfg)
         step = make_round_step(round_fn, source)
 
         def body(carry, _):
@@ -357,11 +390,37 @@ def main(argv=None) -> None:
     ap.add_argument("--alphas", default="", help="axis overriding --alpha")
     ap.add_argument("--sigma0s", default="", help="axis overriding --sigma0")
     ap.add_argument("--deltas", default="", help="axis overriding --delta")
+    ap.add_argument("--cohort", type=int, default=None,
+                    help="per-round cohort size C (cross-device scale mode: "
+                    "stateless clients, O(C) round memory)")
+    ap.add_argument("--buffer-size", type=int, default=0,
+                    help="add a buffered semi-async strategy arm committing "
+                    "when this many updates have arrived (0: sync only)")
+    ap.add_argument("--deadline-rounds", type=int, default=4,
+                    help="buffered arm: commit after this many rounds even "
+                    "if the buffer has not filled")
+    ap.add_argument("--staleness-discount", type=float, default=0.0,
+                    help="buffered arm: per-round decay of the standing "
+                    "buffer, in [0, 1)")
+    ap.add_argument("--wait-for-full", action="store_true",
+                    help="buffered arm: commit ONLY when the buffer fills "
+                    "(ignore the deadline)")
+    ap.add_argument("--buffered-only", action="store_true",
+                    help="drop the sync arm when --buffer-size is set")
     ap.add_argument("--out", default="benchmarks/out/sweeps",
                     help="results-store directory (JSONL + npz)")
     ap.add_argument("--suite", default="cli", help="suite tag on the records")
     args = ap.parse_args(argv)
 
+    from repro.scale import SYNC, Strategy
+
+    strategies = (SYNC,)
+    if args.buffer_size:
+        arm = Strategy("buffered", wait_for_full=args.wait_for_full,
+                       buffer_size=args.buffer_size,
+                       deadline_rounds=args.deadline_rounds,
+                       staleness_discount=args.staleness_discount)
+        strategies = (arm,) if args.buffered_only else (SYNC, arm)
     spec = SweepSpec(
         algorithms=tuple(args.algos.split(",")),
         schemes=tuple(args.schemes.split(",")),
@@ -372,14 +431,16 @@ def main(argv=None) -> None:
         sigma0=args.sigma0,
         lrs=_float_list(args.lrs), gammas=_float_list(args.gammas),
         alphas=_float_list(args.alphas), sigma0s=_float_list(args.sigma0s),
-        deltas=_float_list(args.deltas))
+        deltas=_float_list(args.deltas),
+        strategies=strategies, cohort_size=args.cohort)
     store = ResultsStore(args.out)
-    print("sweep,scheme,algo,hparams,seeds,test_acc_mean,test_acc_ci95,"
-          "train_acc_mean", flush=True)
+    print("sweep,scheme,algo,strategy,hparams,seeds,test_acc_mean,"
+          "test_acc_ci95,train_acc_mean", flush=True)
     for cell in run_sweep(spec, store=store, suite=args.suite):
         s = cell.summary()
         hp = ";".join(f"{k}={v:g}" for k, v in sorted(cell.hparams.items()))
-        print(f"sweep,{cell.scheme},{cell.algo},{hp},{len(cell.seeds)},"
+        print(f"sweep,{cell.scheme},{cell.algo},{cell.strategy},{hp},"
+              f"{len(cell.seeds)},"
               f"{s['test_acc']['mean']:.4f},{s['test_acc']['ci95']:.4f},"
               f"{s['train_acc']['mean']:.4f}", flush=True)
     print(f"# results appended to {store.path}", flush=True)

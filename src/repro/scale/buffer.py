@@ -1,0 +1,263 @@
+"""Buffered semi-async aggregation engine.
+
+Cross-device FL servers do not wait for the whole active set: arriving
+client updates are folded into a running buffer and an aggregation step
+*commits* when the buffer fills or a deadline passes — the
+``Strategy(wait_for_full, buffer_size, ms_to_wait)`` shape of
+afl-aggregation-bench (SNIPPETS.md), with the wall-clock deadline recast
+in *rounds* (the engine's native clock). Between commits the server
+model is frozen, so every buffered contributor trained from its own
+model — FedPBC's implicit gossiping happens among them by construction
+— and on commit the postponed broadcast goes to exactly the clients
+whose updates entered the committed buffer.
+
+The fold is exact for the whole fusable (empty-state) family: each
+member's server rule is either a masked mean (``OP_MEAN``) or a
+weighted-delta step (``OP_ALL`` / ``OP_KNOWN_P``), and both are sums
+over contributions — so folding per-round partial sums into
+``(acc, weight)`` and dividing/adding once at commit reproduces the
+synchronous update. In the degenerate configuration (commit every
+round: ``deadline_rounds=1`` without ``wait_for_full``, or
+``wait_for_full`` with a buffer the round always fills) the committed
+expression is term-for-term the synchronous ``masked_mean`` /
+``weighted_sum`` trace, which is what the bit-for-bit pin in
+``tests/test_staleness.py`` holds the engine to.
+
+Staleness: each buffered contribution ages one round per round it waits;
+``age_sum``/``count`` track the buffer's total age so the per-commit mean
+staleness is exact. ``staleness_discount`` multiplies the standing buffer
+(numerator AND weight) by ``1 - discount`` per round, down-weighting stale
+contributions without biasing the mean.
+
+Every strategy knob is a *traced* per-trajectory input in the sweep
+engine (``strategy_knob_columns``), so buffered-vs-sync — or a whole
+grid of buffer sizes and deadlines — is one more batched dimension of a
+single compiled program.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Mapping, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.algorithms import _bmask
+from repro.kernels.masked_agg import OP_ALL, OP_KNOWN_P, OP_MEAN
+
+Pytree = Any
+
+
+@dataclass(frozen=True)
+class Strategy:
+    """One buffered-aggregation policy (a sweep-axis value).
+
+    ``wait_for_full``: commit ONLY when ``buffer_size`` contributions have
+    arrived (the deadline is ignored). Otherwise commit when the buffer
+    fills OR ``deadline_rounds`` rounds have passed since the last commit.
+    ``staleness_discount`` in [0, 1): per-round decay applied to the
+    standing buffer (0 = pure partial sums, the exact fold).
+    """
+
+    name: str
+    wait_for_full: bool = False
+    buffer_size: int = 1
+    deadline_rounds: int = 1
+    staleness_discount: float = 0.0
+
+    @property
+    def is_sync(self) -> bool:
+        """Whether this policy commits every round regardless of arrivals —
+        the degenerate configuration equal to the synchronous engine."""
+        return (not self.wait_for_full) and self.deadline_rounds == 1
+
+
+SYNC = Strategy("sync")
+
+# Traced knob columns, in batch-layout order. dtypes: bool/int32/int32/float32.
+STRATEGY_KNOB_FIELDS = ("wait_for_full", "buffer_size", "deadline_rounds",
+                        "staleness_discount")
+
+# Per-round metrics every buffered round emits (callers extend metric_keys).
+BUFFER_METRIC_KEYS = ("commit", "buffer_fill", "commit_staleness")
+
+
+def knobs_of(strategy: Union[Strategy, Mapping[str, Any], None]) -> Dict[str, Any]:
+    """Normalize a strategy into its knob dict: a ``Strategy`` gives python
+    scalars (static branches in the trace), a mapping passes through (the
+    sweep engine's traced per-trajectory columns), None means SYNC."""
+    if strategy is None:
+        strategy = SYNC
+    if isinstance(strategy, Strategy):
+        return {"wait_for_full": bool(strategy.wait_for_full),
+                "buffer_size": int(strategy.buffer_size),
+                "deadline_rounds": int(strategy.deadline_rounds),
+                "staleness_discount": float(strategy.staleness_discount)}
+    missing = [k for k in STRATEGY_KNOB_FIELDS if k not in strategy]
+    if missing:
+        raise ValueError(f"strategy knob mapping is missing {missing}; "
+                         f"expected keys {STRATEGY_KNOB_FIELDS}")
+    return {k: strategy[k] for k in STRATEGY_KNOB_FIELDS}
+
+
+def strategy_knob_columns(strategies: Sequence[Strategy],
+                          block: int) -> Dict[str, jnp.ndarray]:
+    """Batch-layout knob columns: each strategy's scalars repeated over its
+    ``block`` trajectories, concatenated in strategy order — the traced
+    inputs that make the strategy axis one more batched dimension."""
+    cols = {
+        "wait_for_full": np.repeat(
+            np.asarray([s.wait_for_full for s in strategies], np.bool_), block),
+        "buffer_size": np.repeat(
+            np.asarray([s.buffer_size for s in strategies], np.int32), block),
+        "deadline_rounds": np.repeat(
+            np.asarray([s.deadline_rounds for s in strategies], np.int32), block),
+        "staleness_discount": np.repeat(
+            np.asarray([s.staleness_discount for s in strategies], np.float32),
+            block),
+    }
+    return {k: jnp.asarray(v) for k, v in cols.items()}
+
+
+@dataclass
+class BufferState:
+    """The server's running buffer between commits.
+
+    ``acc`` mirrors the server pytree in fp32 (partial numerator / delta
+    sum); ``weight``/``count`` are the folded denominator and contribution
+    count; ``since`` counts rounds since the last commit (the deadline
+    clock); ``age_sum`` accumulates contribution ages for the staleness
+    metric; ``in_buffer`` marks clients with an update in the standing
+    buffer (the postponed-broadcast recipients); ``commits`` counts commits.
+    """
+
+    acc: Pytree
+    weight: jnp.ndarray     # scalar f32
+    count: jnp.ndarray      # scalar i32
+    since: jnp.ndarray      # scalar i32
+    age_sum: jnp.ndarray    # scalar f32
+    in_buffer: jnp.ndarray  # [m] bool
+    commits: jnp.ndarray    # scalar i32
+
+
+jax.tree_util.register_dataclass(
+    BufferState,
+    data_fields=["acc", "weight", "count", "since", "age_sum", "in_buffer",
+                 "commits"],
+    meta_fields=[],
+)
+
+
+def init_buffer_state(server: Pytree, m: int) -> BufferState:
+    return BufferState(
+        acc=jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), server),
+        weight=jnp.float32(0.0),
+        count=jnp.int32(0),
+        since=jnp.int32(0),
+        age_sum=jnp.float32(0.0),
+        in_buffer=jnp.zeros((m,), bool),
+        commits=jnp.int32(0),
+    )
+
+
+def _sel(pred, a, b):
+    """Select that stays a python branch for static (bool) predicates."""
+    if isinstance(pred, (bool, np.bool_)):
+        return a if pred else b
+    return jnp.where(pred, a, b)
+
+
+def buffered_aggregate(buf: BufferState, server: Pytree, x_star: Pytree,
+                       active, p_t, knobs: Mapping[str, Any], *, op,
+                       m_total: int, in_buffer_new) -> tuple:
+    """Fold one round of arrivals into the buffer; commit if due.
+
+    ``x_star``: the round's trained client params, leading axis matching
+    ``active`` (the full ``[m]`` population or a gathered ``[C]`` cohort).
+    ``op``: the member's fused opcode (``FUSED_OPS[name]``) — a python int
+    for a static member or a traced scalar for the batched family axis.
+    ``m_total``: the population the delta-weighted members normalize by
+    (m dense, C in cohort mode). ``in_buffer_new``: the updated ``[m]``
+    membership mask (caller scatters cohort arrivals into it).
+
+    Returns ``(new_buffer, new_server, commit, metrics)`` with ``metrics``
+    keyed by ``BUFFER_METRIC_KEYS``.
+    """
+    f32 = jnp.float32
+    static_op = isinstance(op, (int, np.integer))
+    w_mean = active.astype(f32)
+    if static_op:
+        is_mean = int(op) == OP_MEAN
+        if int(op) == OP_MEAN:
+            w = w_mean
+        elif int(op) == OP_ALL:
+            w = w_mean / m_total
+        else:
+            w = w_mean / jnp.maximum(p_t, 1e-3) / m_total
+    else:
+        is_mean = op == OP_MEAN
+        w = jnp.where(is_mean, w_mean,
+                      jnp.where(op == OP_ALL, w_mean / m_total,
+                                w_mean / jnp.maximum(p_t, 1e-3) / m_total))
+
+    decay = 1.0 - knobs["staleness_discount"]
+
+    # Fold this round's arrivals. mean members accumulate raw params
+    # (the masked_mean numerator), delta members accumulate weighted
+    # deltas vs the FROZEN server — between commits the server does not
+    # move, so the fold is the synchronous sum taken in installments.
+    def leaf_contrib(xs, s):
+        xf = xs.astype(f32)
+        if static_op:
+            d = xf if is_mean else xf - s[None].astype(f32)
+        else:
+            d = jnp.where(is_mean, xf, xf - s[None].astype(f32))
+        return (d * _bmask(w, d)).sum(0)
+
+    contrib = jax.tree.map(leaf_contrib, x_star, server)
+    # decay * 0 + contrib == contrib exactly (the standing buffer is +0.0
+    # after init/commit), so the commit-every-round path stays bitwise.
+    acc = jax.tree.map(lambda a, c: decay * a + c, buf.acc, contrib)
+    weight = decay * buf.weight + w.sum()
+    n_new = active.sum().astype(jnp.int32)
+    count = buf.count + n_new
+    since = buf.since + 1
+    # everything already buffered ages one round before the new arrivals land
+    age_sum = buf.age_sum + buf.count.astype(f32)
+
+    full = count >= knobs["buffer_size"]
+    due = since >= knobs["deadline_rounds"]
+    commit = _sel(knobs["wait_for_full"], full, full | due)
+
+    # Commit expressions mirror the synchronous branches term for term:
+    # mean members divide by max(weight, 1) and keep the server on an empty
+    # buffer; delta members add the folded update.
+    denom = jnp.maximum(weight, 1.0)
+    nonempty = weight > 0.0
+
+    def leaf_server(a, s):
+        mean_srv = jnp.where(nonempty, (a / denom).astype(s.dtype), s)
+        delta_srv = s + a.astype(s.dtype)
+        committed = _sel(is_mean, mean_srv, delta_srv)
+        return jnp.where(commit, committed, s)
+
+    new_server = jax.tree.map(leaf_server, acc, server)
+
+    mean_age = age_sum / jnp.maximum(count.astype(f32), 1.0)
+    new_buf = BufferState(
+        acc=jax.tree.map(lambda a: jnp.where(commit, 0.0, a), acc),
+        weight=jnp.where(commit, 0.0, weight),
+        count=jnp.where(commit, 0, count),
+        since=jnp.where(commit, 0, since),
+        age_sum=jnp.where(commit, 0.0, age_sum),
+        in_buffer=jnp.where(commit, jnp.zeros_like(in_buffer_new),
+                            in_buffer_new),
+        commits=buf.commits + commit.astype(jnp.int32),
+    )
+    metrics = {
+        "commit": commit.astype(f32),
+        "buffer_fill": count.astype(f32),
+        "commit_staleness": jnp.where(commit, mean_age, 0.0),
+    }
+    return new_buf, new_server, commit, metrics

@@ -1,0 +1,36 @@
+"""On-device per-round cohort subsampling.
+
+Cross-device servers never talk to all m clients in a round: a cohort of
+C ≪ m candidates is drawn, and only those face the link process. The
+composition preserves ``core/federated.py``'s mask semantics — the link
+is still sampled over the full ``[m]`` population (its state, Markov
+chains included, advances identically whether or not a cohort is drawn),
+and the cohort's arrival mask is the *gather* ``active[cohort]`` — so a
+client participates iff it is sampled AND its uplink is up, and the
+per-round client-side compute/memory is O(C) not O(m).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sample_cohort(key, m: int, size: int) -> jnp.ndarray:
+    """Uniform without-replacement cohort: ``[size]`` unique int32 client
+    indices in [0, m). ``size`` is static (shapes depend on it)."""
+    if not 1 <= size <= m:
+        raise ValueError(f"cohort size {size} must be in [1, m={m}]")
+    return jax.random.choice(key, m, (size,), replace=False).astype(jnp.int32)
+
+
+def cohort_arrivals(cohort, active_m, p_t_m):
+    """Gather the full-population link draw down to the cohort: the ``[C]``
+    arrival mask (sampled AND link up) and the matching ``[C]`` link
+    probabilities for importance-weighted members."""
+    return active_m[cohort], p_t_m[cohort]
+
+
+def scatter_mask(cohort, values, m: int) -> jnp.ndarray:
+    """Scatter a ``[C]`` bool cohort mask into a dense ``[m]`` mask (rows
+    outside the cohort are False) — for bookkeeping that stays ``[m]``."""
+    return jnp.zeros((m,), bool).at[cohort].set(values)

@@ -1,0 +1,151 @@
+"""Gather/scatter sparse updates for per-client ``AlgoState`` leaves.
+
+The stateful aggregation rules keep ``[m, ...]`` per-client leaves —
+FedAU's gap stats, MIFA's update memory, F3AST's availability EMAs,
+FedPBC-M's momentum. At m=50k a dense elementwise update over those
+leaves every round is exactly the O(m) work cohort subsampling exists to
+avoid, and for MIFA the ``[m, n_params]`` memory write would dominate.
+Here each rule gets a *cohort branch*: per-client state is read via
+``leaf[cohort]`` gathers and written via ``leaf.at[cohort].set`` scatters,
+so only the C sampled rows are touched per round and no dense
+``[m, n_params]`` *update* tensor materializes (MIFA's memory itself is
+inherently ``[m, n_params]`` storage; its per-round write is O(C·n) and
+its read is the running mean over rows).
+
+Semantics vs the dense branches: identical update rules applied to the
+cohort's rows, with population normalizations taken over the cohort
+(C clients drew a round; the delta-weighted members average over those C
+candidates, and FedAU's gap clocks tick in cohort appearances — the
+natural unit when a client's state is only observable when sampled).
+Every branch has signature
+``(algo_state, server, x_star_c, cohort, c_active, c_p, t) ->
+(algo_state', server')`` with ``x_star_c``/``c_active``/``c_p`` already
+gathered to ``[C, ...]``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.algorithms import (
+    AlgorithmSpec,
+    _bmask,
+    masked_mean,
+    weighted_sum,
+)
+
+Pytree = Any
+
+
+def _delta(x_star, server):
+    return jax.tree.map(
+        lambda xs, s: xs.astype(jnp.float32) - s[None].astype(jnp.float32),
+        x_star, server)
+
+
+def _apply(server, upd):
+    return jax.tree.map(lambda s, u: s + u.astype(s.dtype), server, upd)
+
+
+def _cohort_fedau(spec: AlgorithmSpec) -> Callable:
+    K = spec.fedau_K
+
+    def branch(algo, server, x_star, cohort, c_active, c_p, t):
+        C = c_active.shape[0]
+        gap_c = jnp.minimum(algo.gap[cohort] + 1.0, float(K))
+        sum_c = algo.sum_gaps[cohort] + jnp.where(c_active, gap_c, 0.0)
+        n_c = algo.n_gaps[cohort] + c_active.astype(jnp.float32)
+        mean_gap = jnp.where(n_c > 0, sum_c / jnp.maximum(n_c, 1.0), 1.0)
+        w = c_active.astype(jnp.float32) * mean_gap / C
+        new_server = _apply(server, weighted_sum(_delta(x_star, server), w))
+        new_algo = dataclasses.replace(
+            algo,
+            gap=algo.gap.at[cohort].set(jnp.where(c_active, 0.0, gap_c)),
+            sum_gaps=algo.sum_gaps.at[cohort].set(sum_c),
+            n_gaps=algo.n_gaps.at[cohort].set(n_c))
+        return new_algo, new_server
+
+    return branch
+
+
+def _cohort_mifa(spec: AlgorithmSpec) -> Callable:
+    def branch(algo, server, x_star, cohort, c_active, c_p, t):
+        delta = _delta(x_star, server)
+        # O(C·n) scatter: only arrived cohort rows of the memory change
+        mem = jax.tree.map(
+            lambda old, new: old.at[cohort].set(
+                jnp.where(_bmask(c_active, new) > 0, new.astype(old.dtype),
+                          old[cohort])),
+            algo.mem, delta)
+        upd = jax.tree.map(lambda g: g.mean(0), mem)
+        return dataclasses.replace(algo, mem=mem), _apply(server, upd)
+
+    return branch
+
+
+def _cohort_f3ast(spec: AlgorithmSpec) -> Callable:
+    beta, cap = spec.f3ast_beta, spec.f3ast_cap
+
+    def branch(algo, server, x_star, cohort, c_active, c_p, t):
+        lam_c = (1.0 - beta) * algo.lam[cohort] \
+            + beta * c_active.astype(jnp.float32)
+        # availability-balanced pick within the cohort: the `cap` arrived
+        # clients with the smallest EMA
+        score = jnp.where(c_active, lam_c, jnp.inf)
+        rank = jnp.argsort(jnp.argsort(score))
+        selected = c_active & (rank < cap)
+        any_sel = selected.any()
+        agg = masked_mean(x_star, selected)
+        new_server = jax.tree.map(
+            lambda a, s: jnp.where(any_sel, a, s), agg, server)
+        new_algo = dataclasses.replace(
+            algo, lam=algo.lam.at[cohort].set(lam_c))
+        return new_algo, new_server
+
+    return branch
+
+
+def _cohort_fedpbc_m(spec: AlgorithmSpec) -> Callable:
+    beta = spec.fedpbc_m_beta
+
+    def branch(algo, server, x_star, cohort, c_active, c_p, t):
+        any_active = c_active.any()
+        agg = masked_mean(x_star, c_active)
+        step = jax.tree.map(
+            lambda a, s: jnp.where(any_active, a.astype(jnp.float32)
+                                   - s.astype(jnp.float32), 0.0), agg, server)
+        mom = jax.tree.map(lambda m_, g: beta * m_[0] + g, algo.mom, step)
+        new_server = jax.tree.map(
+            lambda s, m_: (s.astype(jnp.float32) + m_).astype(s.dtype),
+            server, mom)
+        new_algo = dataclasses.replace(
+            algo, mom=jax.tree.map(lambda x: x[None], mom))
+        return new_algo, new_server
+
+    return branch
+
+
+_COHORT_DEFS: Dict[str, Callable[[AlgorithmSpec], Callable]] = {
+    "fedau": _cohort_fedau,
+    "mifa": _cohort_mifa,
+    "f3ast": _cohort_f3ast,
+    "fedpbc_m": _cohort_fedpbc_m,
+}
+
+COHORT_STATEFUL = frozenset(_COHORT_DEFS)
+
+
+def cohort_branch(name: str, spec: AlgorithmSpec) -> Callable:
+    """The sparse cohort aggregate for a stateful rule. The fusable
+    (empty-state) family does not appear here: its cohort path runs
+    through the buffer engine (``repro.scale.buffer``), SYNC knobs
+    included."""
+    if name not in _COHORT_DEFS:
+        raise ValueError(
+            f"no sparse cohort branch for {name!r} (stateful rules: "
+            f"{sorted(_COHORT_DEFS)}; the empty-state family aggregates "
+            f"through the buffer engine)")
+    return _COHORT_DEFS[name](spec)

@@ -1,10 +1,17 @@
-"""Proposition 2: E[t - tau_i(t)] <= 1/c when p_i^t >= c."""
+"""Proposition 2: E[t - tau_i(t)] <= 1/c when p_i^t >= c — plus the
+buffered-engine staleness metric and its degenerate-equality pin
+(``repro.scale``): a buffered configuration that commits every round is
+bit-for-bit the synchronous engine."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import FederationConfig
-from repro.core import make_link_process
+from repro.core import init_fed_state, make_link_process, make_run_rounds
+from repro.core.algorithms import make_algorithm_spec
+from repro.data import fixed_source
+from repro.optim import sgd
+from repro.scale import BUFFER_METRIC_KEYS, Strategy
 
 
 def test_staleness_bound_bernoulli():
@@ -48,3 +55,79 @@ def test_staleness_tracked_by_engine():
         staleness.append(np.asarray(mets["staleness"]))
     # average staleness ~ 1/p = 2 (plus the initial -1 rounds); bounded
     assert np.mean(staleness[50:]) < 2.0 / 0.5 + 1.0
+
+
+def _scale_problem(m, p):
+    """A tiny quadratic problem on the real engine, fedpbc family."""
+    fed = FederationConfig(algorithm="fedpbc", num_clients=m, local_steps=2)
+    spec = make_algorithm_spec(("fedpbc",), fed)
+    link = make_link_process(jnp.full((m,), p), fed)
+    loss = lambda params, batch: jnp.sum(
+        (params["x"] - batch["u"].sum()) ** 2)
+    source = fixed_source({"u": jnp.zeros((m, fed.local_steps, 1))})
+    return fed, spec, link, loss, sgd(0.05), source
+
+
+def _run(fed, spec, link, loss, opt, source, *, rounds, strategy=None,
+         metric_keys=("loss", "num_active", "staleness")):
+    run = make_run_rounds(loss, opt, spec, link, fed, source,
+                          metric_keys=metric_keys, donate=False,
+                          strategy=strategy)
+    st = init_fed_state(jax.random.PRNGKey(0), {"x": jnp.ones(3)}, fed,
+                        spec, link, opt, buffered=strategy is not None)
+    st, _, mets = run(st, source.init(jax.random.PRNGKey(2)),
+                      jax.random.PRNGKey(3), rounds)
+    return st, mets
+
+
+def test_buffered_staleness_bounded_by_deadline():
+    """Each buffered contribution waits at most deadline_rounds - 1 rounds
+    before its commit, so the per-commit mean staleness is bounded by the
+    deadline; with p=0.5 links the loose engine bound deadline + 1/p holds
+    with plenty of margin, and commits actually happen at the deadline
+    cadence (the buffer of 6 rarely fills from ~2 arrivals per round)."""
+    m, p, rounds = 16, 0.5, 240
+    deadline = 4
+    strat = Strategy("buf", buffer_size=6, deadline_rounds=deadline)
+    fed, spec, link, loss, opt, source = _scale_problem(m, p)
+    st, mets = _run(fed, spec, link, loss, opt, source, rounds=rounds,
+                    strategy=strat,
+                    metric_keys=("staleness",) + BUFFER_METRIC_KEYS)
+    commit = np.asarray(mets["commit"])
+    stale = np.asarray(mets["commit_staleness"])
+    n_commits = commit.sum()
+    assert n_commits >= rounds / deadline            # deadline forces commits
+    mean_stale = (stale * commit).sum() / n_commits
+    assert 0.0 < mean_stale <= deadline + 1.0 / p
+    # and per-commit staleness never exceeds the deadline itself
+    assert stale.max() <= deadline
+    assert float(np.asarray(st.buffer.commits)) == n_commits
+
+
+def test_degenerate_buffered_equals_sync_bit_for_bit():
+    """The pin: a buffered configuration that commits every round IS the
+    synchronous engine — same server, same clients, same metrics, bitwise.
+    Two degenerate routes: wait_for_full with a buffer the (all-active)
+    round always fills, and deadline_rounds=1 under partial activity."""
+    m, rounds = 8, 12
+    cases = [
+        (1.0, Strategy("deg_full", wait_for_full=True, buffer_size=m)),
+        (0.5, Strategy("deg_deadline", deadline_rounds=1)),
+    ]
+    for p, strat in cases:
+        fed, spec, link, loss, opt, source = _scale_problem(m, p)
+        st_ref, mets_ref = _run(fed, spec, link, loss, opt, source,
+                                rounds=rounds)
+        st_buf, mets_buf = _run(fed, spec, link, loss, opt, source,
+                                rounds=rounds, strategy=strat)
+        for a, b in zip(jax.tree.leaves((st_ref.server, st_ref.clients,
+                                         st_ref.last_active)),
+                        jax.tree.leaves((st_buf.server, st_buf.clients,
+                                         st_buf.last_active))):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        for k in ("loss", "num_active", "staleness"):
+            np.testing.assert_array_equal(np.asarray(mets_ref[k]),
+                                          np.asarray(mets_buf[k]))
+        # the degenerate policy committed every round with an empty buffer
+        assert int(np.asarray(st_buf.buffer.commits)) == rounds
+        assert float(np.asarray(st_buf.buffer.weight)) == 0.0
