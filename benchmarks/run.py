@@ -31,6 +31,9 @@ SUITE_INFO = {
                  "batched_agg_B64_m32_n1024", "batched_agg_B64_m256_n1024")),
     "scale": ("cross-device cohort + buffered aggregation vs client count",
               ("scale_m1000", "scale_m10000", "scale_m50000")),
+    "lm_sweep": ("federated LM family sweep on the 2-D (batch, model) mesh "
+                 "vs one device, roofline-gated",
+                 ("lm_family", "cohort")),
 }
 
 
@@ -59,6 +62,7 @@ def main() -> None:
         fig3_quadratic,
         fig8_ablations,
         kernels_bench,
+        lm_sweep,
         roofline,
         scale,
         sweep_throughput,
@@ -79,6 +83,7 @@ def main() -> None:
         "roofline": lambda: roofline.run(),
         "kernels": lambda: kernels_bench.run(),
         "scale": lambda: scale.run(rounds=max(args.rounds // 8, 20)),
+        "lm_sweep": lambda: lm_sweep.run(rounds=max(args.rounds // 25, 4)),
     }
     assert set(suites) == set(SUITE_INFO)
     if args.only:

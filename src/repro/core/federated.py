@@ -127,7 +127,8 @@ def make_round_fn(loss_fn: Callable, optimizer, algorithm,
                   link: LinkProcess, fed_cfg: FederationConfig,
                   spmd_axis_name: Optional[str] = None,
                   algo_id=0, use_kernel: bool = False,
-                  strategy=None, cohort_size: Optional[int] = None):
+                  strategy=None, cohort_size: Optional[int] = None,
+                  gather_updates: Optional[Callable] = None):
     """Build the jit-able round function.
 
     ``algorithm``: an ``Algorithm``, or an ``AlgorithmSpec`` table bound at
@@ -155,11 +156,18 @@ def make_round_fn(loss_fn: Callable, optimizer, algorithm,
     ``AlgorithmSpec`` (the engine needs the family table, not a bound
     ``Algorithm``). None/None is the historical synchronous trace,
     untouched.
+
+    ``gather_updates``: optional hook applied to ``(x_star, losses)`` right
+    after the client vmap, before any cross-client reduction. The 2-D sweep
+    path uses it to gather model-axis-sharded local updates back to
+    replicated (``repro.experiments.sweep``), so every device performs the
+    aggregation redundantly but identically — bit-for-bit with the
+    unsharded trace. None is the identity.
     """
     if strategy is not None or cohort_size is not None:
         return _make_scale_round_fn(loss_fn, optimizer, algorithm, link,
                                     fed_cfg, spmd_axis_name, algo_id,
-                                    strategy, cohort_size)
+                                    strategy, cohort_size, gather_updates)
     algorithm = as_algorithm(algorithm, algo_id, use_kernel=use_kernel)
     s = fed_cfg.local_steps
 
@@ -174,6 +182,8 @@ def make_round_fn(loss_fn: Callable, optimizer, algorithm,
         x_star, opt_state, losses = jax.vmap(
             run, spmd_axis_name=spmd_axis_name)(
             starts, state.opt_state, batches)
+        if gather_updates is not None:
+            x_star, losses = gather_updates((x_star, losses))
 
         algo_state, server, clients = algorithm.aggregate(
             state.algo_state, state.server, state.clients, x_star, active,
@@ -197,7 +207,8 @@ def make_round_fn(loss_fn: Callable, optimizer, algorithm,
 
 
 def _make_scale_round_fn(loss_fn, optimizer, algorithm, link, fed_cfg,
-                         spmd_axis_name, algo_id, strategy, cohort_size):
+                         spmd_axis_name, algo_id, strategy, cohort_size,
+                         gather_updates=None):
     """The cross-device scale round engines (``repro.scale``).
 
     Dense buffered (``cohort_size is None``): the synchronous round's exact
@@ -257,6 +268,8 @@ def _make_scale_round_fn(loss_fn, optimizer, algorithm, link, fed_cfg,
             x_star, opt_state, losses = jax.vmap(
                 run, spmd_axis_name=spmd_axis_name)(
                 starts, state.opt_state, batches)
+            if gather_updates is not None:
+                x_star, losses = gather_updates((x_star, losses))
             in_buffer = state.buffer.in_buffer | active
             buf, server, commit, bmets = buffered_aggregate(
                 state.buffer, state.server, x_star, active, p_t, knobs,
@@ -300,6 +313,8 @@ def _make_scale_round_fn(loss_fn, optimizer, algorithm, link, fed_cfg,
         opt_state = jax.vmap(optimizer.init)(starts)
         x_star, _, losses = jax.vmap(run, spmd_axis_name=spmd_axis_name)(
             starts, opt_state, batches)
+        if gather_updates is not None:
+            x_star, losses = gather_updates((x_star, losses))
         if buffered:
             in_buffer = state.buffer.in_buffer.at[cohort].set(
                 state.buffer.in_buffer[cohort] | c_active)

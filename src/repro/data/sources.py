@@ -114,6 +114,47 @@ def traced_classification_source(shared, *, local_steps: int,
     return DataSource(init, sample, "classification_traced", sample_cohort)
 
 
+def traced_lm_source(shared, *, local_steps: int,
+                     batch_size: int) -> DataSource:
+    """Traced next-token-prediction counterpart of
+    ``traced_classification_source``.
+
+    The corpus travels in ``shared`` (``{"toks": [n, T+1]}`` int32 sequences,
+    each of length context+1 so tokens/labels come from one slice), the
+    per-client Dirichlet partition in ``ds_state`` (``{"idx":
+    [m, per_client]}`` sequence indices). Each round draws ``[m, s, b]``
+    sequences with replacement from every client's shard — the index draw is
+    the same ``randint`` protocol as the classification sources, so the LM
+    task rides the sweep engine's compiled programs with nothing about the
+    dataset baked in as a constant.
+    """
+
+    def init(key, data):
+        return data
+
+    def _slice(seqs):
+        return {"tokens": seqs[..., :-1], "labels": seqs[..., 1:]}
+
+    def sample(ds_state, t, key):
+        client_idx = ds_state["idx"]
+        m, per_client = client_idx.shape
+        pick = jax.random.randint(
+            key, (m, local_steps, batch_size), 0, per_client)
+        sel = client_idx[jnp.arange(m)[:, None, None], pick]
+        return _slice(shared["toks"][sel]), ds_state
+
+    def sample_cohort(ds_state, t, key, cohort):
+        client_idx = ds_state["idx"]
+        per_client = client_idx.shape[1]
+        C = cohort.shape[0]
+        pick = jax.random.randint(
+            key, (C, local_steps, batch_size), 0, per_client)
+        sel = client_idx[cohort[:, None, None], pick]
+        return _slice(shared["toks"][sel]), ds_state
+
+    return DataSource(init, sample, "lm_traced", sample_cohort)
+
+
 def lm_source(*, num_clients: int, local_steps: int, batch: int, seq: int,
               vocab: int, client_shift: bool = True,
               memory_shape: Optional[Tuple[int, ...]] = None) -> DataSource:

@@ -76,6 +76,7 @@ from repro.experiments.tasks import (
     TracedClassificationTask,
     make_classification_task,
     make_traced_classification_task,
+    make_traced_lm_task,
 )
 from repro.optim import paper_decay, sgd
 
@@ -161,8 +162,25 @@ class SweepSpec:
     # extra FederationConfig field overrides, applied last (e.g.
     # (("fedau_K", 100), ("period", 20)))
     fed_overrides: Tuple[Tuple[str, Any], ...] = ()
+    # workload: "classification" (the paper's Gaussian/MLP stand-in) or "lm"
+    # (reduced-config transformer next-token task, repro.experiments.tasks
+    # .make_traced_lm_task). For "lm" the lm_* knobs shape the model/corpus
+    # (classes doubles as the number of corpus styles, per_client /
+    # local_steps / batch_size keep their meaning), and dim/hidden/
+    # n_per_class/n_train are ignored.
+    task: str = "classification"
+    lm_arch: str = "smollm-135m"
+    lm_d_model: int = 64
+    lm_layers: int = 2
+    lm_seq: int = 32                # training context length
+    lm_n_seqs: int = 256            # corpus size (train sequences)
+    lm_n_test: int = 64             # held-out eval sequences
 
     def __post_init__(self):
+        if self.task not in ("classification", "lm"):
+            raise ValueError(
+                f"SweepSpec.task={self.task!r}; expected 'classification' "
+                f"or 'lm'")
         for axis in ("algorithms", "schemes", "seeds"):
             vals = getattr(self, axis)
             if not vals:
@@ -322,12 +340,18 @@ def _task_key(spec: SweepSpec) -> tuple:
     partition is a per-point traced input, not part of the task)."""
     return (spec.data_seed, spec.num_clients, spec.dim, spec.classes,
             spec.hidden, spec.n_per_class, spec.n_train,
-            spec.per_client, spec.local_steps, spec.batch_size)
+            spec.per_client, spec.local_steps, spec.batch_size,
+            spec.task, spec.lm_arch, spec.lm_d_model, spec.lm_layers,
+            spec.lm_seq, spec.lm_n_seqs, spec.lm_n_test)
 
 
 def get_task(spec: SweepSpec) -> ClassificationTask:
     """The constant-capturing task at the spec's scalar alpha (kept for the
     sequential baselines; the executor itself runs on ``get_traced_task``)."""
+    if spec.task != "classification":
+        raise ValueError(
+            f"get_task covers the constant classification baseline only; "
+            f"the {spec.task!r} workload is traced-only (get_traced_task)")
     key = _task_key(spec) + (spec.alpha,)
     if key not in _TASK_CACHE:
         _TASK_CACHE[key] = make_classification_task(
@@ -342,12 +366,21 @@ def get_task(spec: SweepSpec) -> ClassificationTask:
 def get_traced_task(spec: SweepSpec) -> TracedClassificationTask:
     key = _task_key(spec)
     if key not in _TRACED_TASK_CACHE:
-        _TRACED_TASK_CACHE[key] = make_traced_classification_task(
-            data_seed=spec.data_seed, num_clients=spec.num_clients,
-            dim=spec.dim, classes=spec.classes, hidden=spec.hidden,
-            n_per_class=spec.n_per_class, n_train=spec.n_train,
-            per_client=spec.per_client, local_steps=spec.local_steps,
-            batch_size=spec.batch_size)
+        if spec.task == "lm":
+            _TRACED_TASK_CACHE[key] = make_traced_lm_task(
+                data_seed=spec.data_seed, num_clients=spec.num_clients,
+                arch=spec.lm_arch, d_model=spec.lm_d_model,
+                layers=spec.lm_layers, seq_len=spec.lm_seq,
+                classes=spec.classes, n_seqs=spec.lm_n_seqs,
+                n_test=spec.lm_n_test, per_client=spec.per_client,
+                local_steps=spec.local_steps, batch_size=spec.batch_size)
+        else:
+            _TRACED_TASK_CACHE[key] = make_traced_classification_task(
+                data_seed=spec.data_seed, num_clients=spec.num_clients,
+                dim=spec.dim, classes=spec.classes, hidden=spec.hidden,
+                n_per_class=spec.n_per_class, n_train=spec.n_train,
+                per_client=spec.per_client, local_steps=spec.local_steps,
+                batch_size=spec.batch_size)
     return _TRACED_TASK_CACHE[key]
 
 
@@ -369,7 +402,7 @@ def _has_strategy_axis(spec: SweepSpec) -> bool:
 
 
 def _runner_for(spec: SweepSpec, fed: FederationConfig, task,
-                metric_keys) -> Any:
+                metric_keys, shard_mesh=None) -> Any:
     # Everything swept reaches the compiled program through traced inputs —
     # zero the hyperparameter knobs so cells differing only in them share one
     # compiled runner, and canonicalize the algorithm name to its
@@ -392,8 +425,12 @@ def _runner_for(spec: SweepSpec, fed: FederationConfig, task,
     # the scale modes are distinct traced programs: cohort size changes
     # every client-axis shape, buffered threads a BufferState + knob inputs
     buffered = _has_strategy_axis(spec)
+    # a 2-D shard_mesh bakes placement constraints into the trace, so it is
+    # a distinct program; jax Meshes hash by (devices, axes), so equal
+    # meshes share the cache entry
     key = (_task_key(spec), canon, spec.rounds, spec.eval_every,
-           tuple(metric_keys), use_kernel, spec.cohort_size, buffered)
+           tuple(metric_keys), use_kernel, spec.cohort_size, buffered,
+           shard_mesh)
     if key not in _RUNNER_CACHE:
         algo = make_algorithm_spec(family, fed)
         _RUNNER_CACHE[key] = make_batched_run_rounds(
@@ -409,7 +446,8 @@ def _runner_for(spec: SweepSpec, fed: FederationConfig, task,
             metric_keys=metric_keys,
             use_kernel=use_kernel,
             cohort_size=spec.cohort_size,
-            buffered=buffered)
+            buffered=buffered,
+            shard_mesh=shard_mesh)
     return _RUNNER_CACHE[key]
 
 
@@ -522,7 +560,7 @@ def _sharded_cell_batch(spec: SweepSpec, fed: FederationConfig,
                 lambda x: jax.device_put(x, replicated_sharding(mesh)),
                 batch.shared)
         batch = dataclasses.replace(batch, shared=entry["shared"])
-        padded, b_real = pad_batch(batch, mesh.devices.size)
+        padded, b_real = pad_batch(batch, mesh.shape["batch"])
         entry["groups"][algos] = (shard_batch(padded, mesh), b_real)
     sharded, b_real = entry["groups"][algos]
     lr = sharded.hparams["lr"]
@@ -597,8 +635,12 @@ def _run_batch(spec: SweepSpec, algos: Tuple[str, ...], scheme: str, *,
     if buffered:
         metric_keys = tuple(metric_keys) + tuple(
             k for k in _BUFFER_KEYS if k not in metric_keys)
-    runner = _runner_for(spec, fed, task, metric_keys)
     batch_mesh = resolve_batch_mesh(mesh, devices)
+    # a mesh with a "model" axis selects the 2-D path: the runner itself is
+    # built for the mesh (in-trace placement constraints + spmd axis names)
+    mesh2d = batch_mesh if (batch_mesh is not None
+                            and "model" in batch_mesh.axis_names) else None
+    runner = _runner_for(spec, fed, task, metric_keys, shard_mesh=mesh2d)
     if batch_mesh is not None:
         # memoized pad + device_put (shard.run_sharded is the uncached
         # one-shot equivalent); padding rows are sliced off right here, so

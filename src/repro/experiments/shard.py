@@ -91,13 +91,15 @@ def pad_batch(batch: CellBatch, multiple: int) -> tuple:
 
 def shard_batch(batch: CellBatch, mesh: Mesh) -> CellBatch:
     """Commit the batch to ``mesh``: [B]-leading fields split over the
-    ``"batch"`` axis, ``shared`` replicated. The batch size must already be a
-    multiple of the mesh's device count (see ``pad_batch``)."""
-    n = mesh.devices.size
+    ``"batch"`` axis, ``shared`` replicated (on a 2-D mesh that means each
+    trajectory's inputs are replicated across its ``"model"`` devices). The
+    batch size must already be a multiple of the mesh's batch axis (see
+    ``pad_batch``)."""
+    n = mesh.shape["batch"]
     if batch.batch_size % n:
         raise ValueError(
             f"batch size {batch.batch_size} not divisible by the mesh's "
-            f"{n} devices; pad_batch first")
+            f"batch axis ({n}); pad_batch first")
     split = leading_axis_sharding(mesh)
     repl = replicated_sharding(mesh)
     keys, p_base, hparams, data, algo_id = jax.tree.map(
@@ -113,8 +115,54 @@ def run_sharded(runner, batch: CellBatch, mesh: Mesh):
     padding rows from every output leaf (host-side slice — padding must never
     leak into downstream results). Same ``(states, out)`` contract as calling
     ``runner(batch)`` directly."""
-    padded, B = pad_batch(batch, mesh.devices.size)
+    padded, B = pad_batch(batch, mesh.shape["batch"])
     states, out = runner(shard_batch(padded, mesh))
+    if padded.batch_size == B:
+        return states, out
+    return jax.tree.map(lambda x: x[:B], (states, out))
+
+
+def run_sharded_2d(runner, batch: CellBatch, mesh: Mesh, *,
+                   activation_spec=None):
+    """Run one cell batch on a 2-D ``("batch", "model")`` mesh
+    (``repro.launch.mesh.make_2d_mesh``): trajectories split over
+    ``"batch"``, each trajectory's parameters/optimizer state split over
+    ``"model"`` by the runner's internal constraints — the runner must have
+    been built with ``make_batched_run_rounds(..., shard_mesh=mesh)`` (the
+    in-program placement lives in its trace, not in the input shardings).
+
+    ``activation_spec``: optional PartitionSpec for the LM residual stream,
+    installed for the duration of the call via the ``repro.sharding.specs``
+    context hooks so ``maybe_constrain`` inside the model forward becomes
+    live (Megatron-style sequence parallelism, e.g. ``P(None, "model",
+    None)``). The default None leaves activations to GSPMD — the bitwise
+    contract of the CPU tests assumes the default.
+
+    Same pad / execute / host-side-slice contract as ``run_sharded``.
+    """
+    missing = {"batch", "model"} - set(mesh.axis_names)
+    if missing:
+        raise ValueError(
+            f"run_sharded_2d needs a ('batch', 'model') mesh; "
+            f"{mesh.axis_names} lacks {sorted(missing)}")
+    rmesh = getattr(runner, "shard_mesh", None)
+    if rmesh is None or rmesh != mesh:
+        raise ValueError(
+            "runner was not built for this mesh — pass shard_mesh=mesh to "
+            "make_batched_run_rounds (got runner.shard_mesh="
+            f"{rmesh})")
+    padded, B = pad_batch(batch, mesh.shape["batch"])
+    sharded = shard_batch(padded, mesh)
+    if activation_spec is not None:
+        from repro.sharding.specs import activation_sharding, set_mesh
+        set_mesh(mesh)
+        try:
+            with activation_sharding(activation_spec):
+                states, out = runner(sharded)
+        finally:
+            set_mesh(None)
+    else:
+        states, out = runner(sharded)
     if padded.batch_size == B:
         return states, out
     return jax.tree.map(lambda x: x[:B], (states, out))

@@ -49,11 +49,13 @@ CLI::
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass
 from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import FederationConfig
 from repro.core.algorithms import Algorithm, AlgorithmSpec, as_algorithm
@@ -65,6 +67,7 @@ from repro.core.federated import (
 )
 from repro.data.sources import DataSource
 from repro.scale.buffer import STRATEGY_KNOB_FIELDS
+from repro.sharding.specs import spec_for_shape
 
 Pytree = Any
 
@@ -132,7 +135,8 @@ def make_batched_run_rounds(loss_fn: Callable, algorithm,
                             metric_keys=DEFAULT_METRIC_KEYS,
                             use_kernel: bool = False,
                             cohort_size: Optional[int] = None,
-                            buffered: bool = False):
+                            buffered: bool = False,
+                            shard_mesh=None):
     """Build the jitted B-trajectory runner for one grid cell.
 
     Args:
@@ -176,6 +180,33 @@ def make_batched_run_rounds(loss_fn: Callable, algorithm,
         knobs (``repro.scale.STRATEGY_KNOB_FIELDS``) from ``hparams`` — the
         strategy axis is one more traced batched dimension, zero extra
         compiles.
+      shard_mesh: a 2-D ``("batch", "model")`` mesh
+        (``repro.launch.mesh.make_2d_mesh``) turning the runner into the
+        sharded-LM execution path: the trajectory vmaps carry
+        ``spmd_axis_name="batch"``, the round's client vmap carries
+        ``spmd_axis_name="model"`` (local training parallel over clients,
+        each client's model whole on its device), and the ``FedState`` is
+        constrained so server parameters shard per-leaf over ``"model"``
+        (``repro.sharding.spec_for_shape``) and client/optimizer stacks
+        shard their leading client axis over ``"model"``. Before any
+        cross-client reduction the local updates are gathered back to
+        model-replicated (``gather_updates``), so the aggregation step is
+        computed redundantly-but-identically on every device and
+        introduces no divergence by construction. The remaining divergence
+        source is XLA itself: per-client forward/backward compiles at
+        per-device client shapes (m/model_axis rows instead of m), and on
+        CPU the fusion chosen at a different shape can reassociate a
+        reduction by ~1 ulp. Observed reach: the forward-only scalar loss
+        telemetry in ``out["metrics"]`` (feeds neither gradients nor
+        state), and in cohort mode occasionally the gradients themselves
+        (~1e-8 in server params). The pinned shapes in
+        ``tests/test_lm_sweep.py`` are bitwise across the board —
+        state, evals and metrics — and deterministically so; at other
+        shapes treat state/evals as allclose(1e-6) and metrics as
+        allclose(1e-5). The final state is
+        gathered to model-replicated so downstream host-side evals see
+        plain batch-sharded arrays. Feed the result through
+        ``repro.experiments.shard.run_sharded_2d``.
 
     Returns ``run(batch: CellBatch) -> (states, out)`` where ``states`` is a
     [B]-batched ``FedState`` and ``out["metrics"]`` maps each metric key to a
@@ -205,6 +236,51 @@ def make_batched_run_rounds(loss_fn: Callable, algorithm,
     # thread a BufferState
     has_buffer = scale_mode and isinstance(algorithm, AlgorithmSpec) \
         and algorithm.fusable
+    if shard_mesh is not None and not (
+            {"batch", "model"} <= set(shard_mesh.axis_names)):
+        raise ValueError(
+            f'shard_mesh needs ("batch", "model") axes, got '
+            f"{shard_mesh.axis_names}")
+    spmd_model = "model" if shard_mesh is not None else None
+
+    def _wsc(x, spec):
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(shard_mesh, spec))
+
+    def _replicate(tree):
+        """Gather every leaf to model-replicated (specs written here are the
+        per-trajectory view — the trajectory vmap's spmd_axis_name prepends
+        "batch" on the mapped dim)."""
+        if shard_mesh is None:
+            return tree
+        return jax.tree.map(lambda x: _wsc(x, P()), tree)
+
+    gather = _replicate if shard_mesh is not None else None
+    if eval_fn is not None and shard_mesh is not None:
+        _base_eval = eval_fn
+        # in-program evals reduce over the dataset: gather the (possibly
+        # model-sharded) server params first so the reduction is computed
+        # identically on every device
+        eval_fn = lambda params, shared: _base_eval(_replicate(params), shared)  # noqa: E731
+
+    def _constrain_state(st):
+        """Pin the carried FedState's placement: server per-leaf over
+        "model" (tensor sharding), client/optimizer stacks over their
+        leading client axis. Constraining the scan carry keeps the layout
+        stable across rounds instead of letting GSPMD re-derive it."""
+        if shard_mesh is None:
+            return st
+
+        def client_leaf(x):
+            return _wsc(x, P("model")) if x.ndim >= 1 else x
+
+        return dataclasses.replace(
+            st,
+            server=jax.tree.map(
+                lambda x: _wsc(x, spec_for_shape(x.shape, shard_mesh)),
+                st.server),
+            clients=jax.tree.map(client_leaf, st.clients),
+            opt_state=jax.tree.map(client_leaf, st.opt_state))
 
     def _bound(algo_id):
         """Resolve the per-trajectory dispatch: a traced ``algo_id`` scalar
@@ -224,7 +300,7 @@ def make_batched_run_rounds(loss_fn: Callable, algorithm,
                             optimizer,
                             stateless_clients=cohort_size is not None,
                             buffered=has_buffer)
-        return st, source.init(keys["ds"], data)
+        return _constrain_state(st), source.init(keys["ds"], data)
 
     def scan_point(st, ds, data_key, p_base, hparams, shared, algo_id):
         optimizer = optimizer_factory(hparams)
@@ -238,24 +314,30 @@ def make_batched_run_rounds(loss_fn: Callable, algorithm,
             strat = ({k: hparams[k] for k in STRATEGY_KNOB_FIELDS}
                      if buffered else None)
             round_fn = make_round_fn(loss_fn, optimizer, algorithm, link,
-                                     fed_cfg, algo_id=aid, strategy=strat,
-                                     cohort_size=cohort_size)
+                                     fed_cfg, spmd_axis_name=spmd_model,
+                                     algo_id=aid, strategy=strat,
+                                     cohort_size=cohort_size,
+                                     gather_updates=gather)
         else:
             round_fn = make_round_fn(loss_fn, optimizer, _bound(algo_id),
-                                     link, fed_cfg)
+                                     link, fed_cfg,
+                                     spmd_axis_name=spmd_model,
+                                     gather_updates=gather)
         step = make_round_step(round_fn, source)
 
         def body(carry, _):
             st, ds = carry
             st, ds, mets = step(st, ds, data_key)
-            return (st, ds), {k: mets[k] for k in metric_keys}
+            return (_constrain_state(st), ds), {k: mets[k] for k in metric_keys}
 
         def run_span(carry, length):
             return jax.lax.scan(body, carry, None, length=length)
 
         if not do_eval:
             (st, ds), mets = run_span((st, ds), num_rounds)
-            return st, {"metrics": mets}
+            # final all-gather: downstream consumers (host-side evals,
+            # rows()) see model-replicated, batch-sharded state
+            return _replicate(st), {"metrics": mets}
 
         def chunk(carry, _):
             carry, mets = run_span(carry, eval_every)
@@ -275,11 +357,14 @@ def make_batched_run_rounds(loss_fn: Callable, algorithm,
             evals = jnp.concatenate(
                 [evals, eval_fn(carry[0].server, shared)[None]])
         st, ds = carry
-        return st, {"metrics": mets, "evals": evals}
+        return _replicate(st), {"metrics": mets, "evals": evals}
 
-    init_batch = jax.jit(jax.vmap(init_point, in_axes=(0, 0, 0, 0, None, 0)))
+    spmd_batch = "batch" if shard_mesh is not None else None
+    init_batch = jax.jit(jax.vmap(init_point, in_axes=(0, 0, 0, 0, None, 0),
+                                  spmd_axis_name=spmd_batch))
     scan_batch = jax.jit(jax.vmap(scan_point,
-                                  in_axes=(0, 0, 0, 0, 0, None, 0)))
+                                  in_axes=(0, 0, 0, 0, 0, None, 0),
+                                  spmd_axis_name=spmd_batch))
 
     def run(batch: CellBatch):
         st, ds = init_batch(batch.keys, batch.p_base, batch.hparams,
@@ -289,6 +374,7 @@ def make_batched_run_rounds(loss_fn: Callable, algorithm,
 
     run.init_batch = init_batch
     run.scan_batch = scan_batch
+    run.shard_mesh = shard_mesh
     return run
 
 
@@ -390,6 +476,17 @@ def main(argv=None) -> None:
     ap.add_argument("--alphas", default="", help="axis overriding --alpha")
     ap.add_argument("--sigma0s", default="", help="axis overriding --sigma0")
     ap.add_argument("--deltas", default="", help="axis overriding --delta")
+    ap.add_argument("--task", default="classification",
+                    choices=("classification", "lm"),
+                    help="client workload: the paper's classification task "
+                    "or the smollm-class reduced LM (next-token loss over "
+                    "the styled byte-level corpus)")
+    ap.add_argument("--lm-d-model", type=int, default=64,
+                    help="LM task: reduced model width")
+    ap.add_argument("--lm-layers", type=int, default=2,
+                    help="LM task: reduced layer count")
+    ap.add_argument("--lm-seq", type=int, default=32,
+                    help="LM task: training sequence length")
     ap.add_argument("--cohort", type=int, default=None,
                     help="per-round cohort size C (cross-device scale mode: "
                     "stateless clients, O(C) round memory)")
@@ -432,7 +529,9 @@ def main(argv=None) -> None:
         lrs=_float_list(args.lrs), gammas=_float_list(args.gammas),
         alphas=_float_list(args.alphas), sigma0s=_float_list(args.sigma0s),
         deltas=_float_list(args.deltas),
-        strategies=strategies, cohort_size=args.cohort)
+        strategies=strategies, cohort_size=args.cohort,
+        task=args.task, lm_d_model=args.lm_d_model,
+        lm_layers=args.lm_layers, lm_seq=args.lm_seq)
     store = ResultsStore(args.out)
     print("sweep,scheme,algo,strategy,hparams,seeds,test_acc_mean,"
           "test_acc_ci95,train_acc_mean", flush=True)

@@ -37,7 +37,7 @@ from repro.data import (
     make_classification_data,
     traced_classification_source,
 )
-from repro.data.sources import DataSource
+from repro.data.sources import DataSource, traced_lm_source
 
 
 def mlp_init(key, dim=32, classes=10, hidden=64):
@@ -190,6 +190,87 @@ def make_traced_classification_task(*, data_seed=0, num_clients=100, dim=32,
         meta={"dataset": "gaussian10", "data_seed": data_seed, "dim": dim,
               "classes": classes, "hidden": hidden, "n_train": n_train,
               "n_test": int(len(x_all) - n_train),
+              "num_clients": num_clients, "per_client": per_client,
+              "local_steps": local_steps, "batch_size": batch_size},
+    )
+
+
+# Same field protocol as TracedClassificationTask — the sweep engine and
+# grid.py treat both uniformly; the alias exists so call sites can say what
+# workload they hold.
+LMTask = TracedClassificationTask
+
+
+def _styled_corpus(rng, *, n, seq_len, vocab, classes):
+    """Synthetic byte-level-style corpus: ``n`` sequences of ``seq_len + 1``
+    tokens (tokens/labels come from one slice), each tagged with one of
+    ``classes`` styles. Style ``c`` draws uniformly from the half-vocab window
+    ``[c*V//(2*classes), c*V//(2*classes) + V//2)`` — overlapping slices, so
+    styles are statistically (not trivially) separable, mirroring the
+    overlapping half-vocab protocol of ``lm_source``."""
+    styles = rng.integers(0, classes, size=n).astype(np.int32)
+    offsets = (styles * (vocab // 2)) // max(classes, 1)
+    toks = offsets[:, None] + rng.integers(
+        0, vocab // 2, size=(n, seq_len + 1))
+    return toks.astype(np.int32), styles
+
+
+def make_traced_lm_task(*, data_seed=0, num_clients=8, arch="smollm-135m",
+                        d_model=64, layers=2, seq_len=32, classes=4,
+                        n_seqs=256, n_test=64, per_client=16, local_steps=2,
+                        batch_size=2) -> LMTask:
+    """Reduced-config transformer LM as a first-class sweep workload.
+
+    The model is ``reduced(get_config(arch), d_model, layers)`` forced to
+    float32 (the sweep engine's bitwise contracts assume f32 accumulation);
+    the corpus is a synthetic styled token set, Dirichlet-partitioned over
+    per-sequence style labels exactly like the classification task is over
+    class labels — so the non-IID severity knob ``alpha`` means the same
+    thing. Everything is traced: the corpus rides ``shared`` ({"toks"
+    [n, T+1], "toks_t" [n_test, T+1]}), the partition rides ``ds_state``,
+    evals take ``(params, shared)`` and report next-token accuracy.
+    """
+    import dataclasses as _dc
+
+    from repro.configs import get_config, reduced
+    from repro.models import model as lm
+
+    cfg = _dc.replace(reduced(get_config(arch), d_model=d_model,
+                              layers=layers), dtype="float32")
+    rng = np.random.default_rng(data_seed)
+    toks, styles = _styled_corpus(rng, n=n_seqs, seq_len=seq_len,
+                                  vocab=cfg.vocab_size, classes=classes)
+    toks_t, _ = _styled_corpus(rng, n=n_test, seq_len=seq_len,
+                               vocab=cfg.vocab_size, classes=classes)
+    shared = {"toks": jnp.asarray(toks), "toks_t": jnp.asarray(toks_t)}
+    ce_chunk = min(512, seq_len)
+
+    def partition(alpha: float) -> np.ndarray:
+        prng = np.random.default_rng(data_seed)
+        idx, _ = dirichlet_partition(prng, styles, num_clients, alpha=alpha,
+                                     per_client=per_client)
+        return idx
+
+    def lm_loss(params, batch):
+        return lm.loss_fn(params, cfg, batch, remat=False, ce_chunk=ce_chunk)
+
+    def next_token_accuracy(params, seqs):
+        logits, _ = lm.forward(params, cfg, seqs[:, :-1])
+        return (jnp.argmax(logits, -1) == seqs[:, 1:]).mean()
+
+    return LMTask(
+        loss_fn=lm_loss,
+        init_params=lambda key: lm.init_params(key, cfg),
+        source_factory=lambda sh: traced_lm_source(
+            sh, local_steps=local_steps, batch_size=batch_size),
+        eval_test=lambda params, sh: next_token_accuracy(params, sh["toks_t"]),
+        eval_train=lambda params, sh: next_token_accuracy(params, sh["toks"]),
+        partition=partition,
+        shared=shared,
+        meta={"dataset": "styled-lm", "data_seed": data_seed, "arch": arch,
+              "d_model": d_model, "layers": layers, "seq_len": seq_len,
+              "classes": classes, "vocab": cfg.vocab_size,
+              "n_train": n_seqs, "n_test": n_test,
               "num_clients": num_clients, "per_client": per_client,
               "local_steps": local_steps, "batch_size": batch_size},
     )

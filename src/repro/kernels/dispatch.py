@@ -100,6 +100,69 @@ def resolve_use_kernel(flag: Optional[bool] = None) -> bool:
     return use_kernel_default() if flag is None else bool(flag)
 
 
+def resolve_attention_backend(backend: Optional[str] = None) -> str:
+    """The attention execution backend: explicit arg >
+    ``REPRO_KERNEL_BACKEND`` env var > platform default.
+
+    Unlike :func:`resolve_backend`, the CPU default is ``"xla"`` — the
+    chunked online-softmax reference (``repro.models.attention``) IS the
+    fast CPU path, while running the flash kernel's Pallas body in
+    interpret mode is strictly slower there. ``"interpret"`` remains
+    selectable (env var or arg) for kernel-parity audits.
+    """
+    if backend is None:
+        backend = os.environ.get(_ENV_BACKEND) or None
+    if backend is None:
+        backend = ("compiled" if jax.default_backend() in ("tpu", "gpu")
+                   else "xla")
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown kernel backend {backend!r}; "
+                         f"available: {BACKENDS}")
+    return backend
+
+
+def attention(q, k, v, *, kind="full", window=4096, logit_softcap=0.0,
+              chunk=1024, q_offset=0, backend: Optional[str] = None):
+    """Backend-dispatched causal attention in the model stack's
+    ``[B, T, H, D]`` layout (``repro.models.attention.attention``'s
+    signature; that entry routes here, closing the masked_agg-style audit
+    for ``repro.kernels.flash_attention``).
+
+    The Pallas kernel covers the training shapes: self-attention
+    (``Tq == Tk``, ``q_offset == 0``), ``kind`` full or swa, and ``T``
+    divisible by the kernel's block size. Everything else — block-local
+    ("chunked") masks, decode/prefill offsets, ragged lengths — falls back
+    to the pure-XLA reference, as does ``backend="xla"``. The kernel path
+    repeats GQA kv-heads and transposes to the kernel's ``[B, H, T, D]``
+    layout; tolerance vs the reference follows the module contract table
+    (fp32: bitwise-adjacent allclose; the reference chunks over KV where
+    the kernel blocks over both axes, so reduction order differs).
+    """
+    # lazy: models.attention routes its public entry through this function
+    from repro.models import attention as ref
+
+    backend = resolve_attention_backend(backend)
+    b, tq, h, d = q.shape
+    tk = k.shape[1]
+    bq = min(128, tq)
+    kernel_ok = (backend != "xla" and kind in ("full", "swa")
+                 and q_offset == 0 and tq == tk and tq % bq == 0)
+    if not kernel_ok:
+        return ref.attention_ref(q, k, v, kind=kind, window=window,
+                                 logit_softcap=logit_softcap, chunk=chunk,
+                                 q_offset=q_offset)
+    from repro.kernels.flash_attention import flash_attention
+
+    n_rep = h // k.shape[2]
+    kr = ref._repeat_kv(k, n_rep).transpose(0, 2, 1, 3)
+    vr = ref._repeat_kv(v, n_rep).transpose(0, 2, 1, 3)
+    out = flash_attention(q.transpose(0, 2, 1, 3), kr, vr, causal=True,
+                          window=window if kind == "swa" else 0,
+                          logit_softcap=logit_softcap,
+                          interpret=(backend == "interpret"))
+    return out.transpose(0, 2, 1, 3)
+
+
 def fused_agg(x, mask, op, prev, p, *, block_n: int = 4096,
               backend: Optional[str] = None):
     """Backend-dispatched fused aggregation over one flattened leaf.

@@ -12,8 +12,10 @@ import jax.numpy as jnp
 
 from repro.kernels.dispatch import (
     FUSED_OPS,
+    attention,
     fused_agg,
     fused_agg_pytree,
+    resolve_attention_backend,
     resolve_backend,
     resolve_use_kernel,
     use_kernel_default,
@@ -80,6 +82,8 @@ __all__ = [
     "resolve_backend",
     "resolve_use_kernel",
     "use_kernel_default",
+    "attention",
+    "resolve_attention_backend",
     "flash_attention",
     "flash_attention_ref",
     "gqa_flash_attention",

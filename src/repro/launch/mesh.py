@@ -33,6 +33,32 @@ def make_batch_mesh(devices=None):
     return Mesh(np.asarray(devices), ("batch",))
 
 
+def make_2d_mesh(batch: int, model: int, devices=None):
+    """2-D ``("batch", "model")`` mesh for the LM sweep path: the flattened
+    (point x seed) trajectory axis shards over ``"batch"`` while each
+    trajectory's client axis / parameter storage shards over ``"model"``
+    (``repro.experiments.shard.run_sharded_2d``).
+
+    ``batch * model`` must equal the device count. ``make_2d_mesh(n, 1)`` is
+    semantically the 1-D ``("batch",)`` mesh with a degenerate model axis; on
+    CPU force host devices with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` and split them
+    e.g. ``make_2d_mesh(4, 2)``.
+    """
+    import numpy as np
+
+    from jax.sharding import Mesh
+
+    if devices is None:
+        devices = jax.devices()
+    if batch * model != len(devices):
+        raise ValueError(
+            f"make_2d_mesh({batch}, {model}) needs {batch * model} devices, "
+            f"got {len(devices)}")
+    return Mesh(np.asarray(devices).reshape(batch, model),
+                ("batch", "model"))
+
+
 def dp_axes(mesh) -> tuple:
     """The data-parallel axes: ("pod","data") on the multi-pod mesh."""
     return ("pod", "data") if "pod" in mesh.axis_names else ("data",)

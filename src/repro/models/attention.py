@@ -41,12 +41,29 @@ def _mask_chunk(q_pos, k_pos, kind, window):
 
 
 def attention(q, k, v, *, kind="full", window=4096, logit_softcap=0.0,
-              chunk=1024, q_offset=0):
-    """Causal multi-head attention, chunked over KV.
+              chunk=1024, q_offset=0, backend=None):
+    """Causal multi-head attention, backend-dispatched.
 
     q: [B, Tq, H, D];  k, v: [B, Tk, KV, D];  returns [B, Tq, H, D].
     ``q_offset``: absolute position of q[0] (Tk = q_offset + Tq for training).
+
+    Execution routes through ``repro.kernels.dispatch.attention``
+    (``backend`` arg > ``REPRO_KERNEL_BACKEND`` env > platform default):
+    the Pallas flash kernel on tpu/gpu, this module's chunked reference on
+    CPU (``"xla"`` — on CPU the resolved program is exactly
+    :func:`attention_ref`). Shapes the kernel doesn't cover fall back to
+    the reference regardless of backend.
     """
+    from repro.kernels.dispatch import attention as dispatch_attention
+
+    return dispatch_attention(q, k, v, kind=kind, window=window,
+                              logit_softcap=logit_softcap, chunk=chunk,
+                              q_offset=q_offset, backend=backend)
+
+
+def attention_ref(q, k, v, *, kind="full", window=4096, logit_softcap=0.0,
+                  chunk=1024, q_offset=0):
+    """The pure-XLA chunked (online-softmax) reference implementation."""
     b, tq, h, d = q.shape
     tk = k.shape[1]
     n_rep = h // k.shape[2]

@@ -91,7 +91,19 @@ def _axis_ok(dim: int, mesh: Mesh, axis: str) -> bool:
 
 def spec_for_shape(shape, mesh: Mesh, *, client_axis: bool = False,
                    model_axis="model", data_axis="data", pod_axis="pod") -> P:
-    """Choose a PartitionSpec for one array shape."""
+    """Choose a PartitionSpec for one array shape.
+
+    A dim that does not divide the model axis is still sharded when it is at
+    least as large as the axis (GSPMD pads the ragged last shard): without
+    the fallback, LM leaves with odd dims — a 49152x577 tied embedding, a
+    head projection against a non-power-of-two vocab — would silently
+    replicate on every device, which is exactly the memory blow-up the model
+    axis exists to avoid. Dims smaller than the axis replicate (a shard per
+    device would be mostly padding). NOTE: uneven specs are consumed via
+    ``with_sharding_constraint``, which accepts them (GSPMD pads the ragged
+    shard); ``jax.device_put`` and jit in/out shardings reject non-divisible
+    dims, so commit uneven leaves through a jitted constraint instead.
+    """
     spec = [None] * len(shape)
     start = 0
     if client_axis and len(shape) >= 1:
@@ -107,6 +119,16 @@ def spec_for_shape(shape, mesh: Mesh, *, client_axis: bool = False,
             spec[d] = model_axis
             body.remove(d)
             break
+    else:
+        # pad-or-replicate fallback: no dim divides the model axis — shard
+        # the largest dim that can still fill every device (>= axis size)
+        if model_axis in mesh.axis_names:
+            n = mesh.shape[model_axis]
+            cands = [d for d in body if shape[d] >= n]
+            if cands:
+                d = max(cands, key=lambda d: shape[d])
+                spec[d] = model_axis
+                body.remove(d)
     # fsdp axis: largest remaining divisible dim
     body.sort(key=lambda d: -shape[d])
     for d in body:

@@ -379,6 +379,86 @@ def test_gqa_wrapper():
 
 
 # ---------------------------------------------------------------------------
+# attention dispatch (the masked_agg-style backend audit for the LM path)
+# ---------------------------------------------------------------------------
+
+
+def _qkv_gqa(key, b=2, t=64, h=4, kv=2, d=16):
+    q = jax.random.normal(key, (b, t, h, d))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, t, kv, d))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, t, kv, d))
+    return q, k, v
+
+
+def test_resolve_attention_backend_defaults_and_env(monkeypatch):
+    """CPU default is "xla" (the chunked reference IS the fast CPU path);
+    REPRO_KERNEL_BACKEND and the explicit arg override it, unknown names
+    raise."""
+    from repro.kernels.dispatch import resolve_attention_backend
+    monkeypatch.delenv("REPRO_KERNEL_BACKEND", raising=False)
+    expect = "compiled" if jax.default_backend() in ("tpu", "gpu") else "xla"
+    assert resolve_attention_backend() == expect
+    monkeypatch.setenv("REPRO_KERNEL_BACKEND", "interpret")
+    assert resolve_attention_backend() == "interpret"
+    assert resolve_attention_backend("xla") == "xla"
+    with pytest.raises(ValueError, match="unknown kernel backend"):
+        resolve_attention_backend("metal")
+
+
+def test_attention_cpu_routing_is_bitwise_reference(monkeypatch):
+    """On CPU the dispatched model entry resolves to the pure-XLA reference
+    — routing through the dispatch layer must not change a single bit of
+    the model forward."""
+    from repro.models.attention import attention, attention_ref
+    monkeypatch.delenv("REPRO_KERNEL_BACKEND", raising=False)
+    if jax.default_backend() != "cpu":
+        pytest.skip("CPU routing contract")
+    q, k, v = _qkv_gqa(jax.random.PRNGKey(0))
+    for kw in (dict(kind="full"), dict(kind="swa", window=32),
+               dict(kind="full", logit_softcap=30.0),
+               dict(kind="chunked", window=16)):
+        out = attention(q, k, v, **kw)
+        ref = attention_ref(q, k, v, **kw)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+@pytest.mark.parametrize("kw", [
+    dict(kind="full"),
+    dict(kind="swa", window=32),
+    dict(kind="full", logit_softcap=30.0),
+])
+def test_attention_interpret_kernel_parity(kw):
+    """The Pallas path (interpret on CPU) vs the pure-XLA reference, GQA
+    shapes in the model's [B, T, H, D] layout — the flash_attention row of
+    the dispatch tolerance table."""
+    from repro.kernels.dispatch import attention as dispatch_attention
+    from repro.models.attention import attention_ref
+    q, k, v = _qkv_gqa(jax.random.PRNGKey(7))
+    out = dispatch_attention(q, k, v, backend="interpret", **kw)
+    ref = attention_ref(q, k, v, **kw)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_attention_dispatch_gates_unsupported_to_reference():
+    """Shapes/masks the kernel doesn't cover fall back to the reference
+    bitwise even when a kernel backend is forced: block-local masks,
+    cross-length prefill (q_offset), and T not divisible by the block."""
+    from repro.kernels.dispatch import attention as dispatch_attention
+    from repro.models.attention import attention_ref
+    q, k, v = _qkv_gqa(jax.random.PRNGKey(9))
+    out = dispatch_attention(q, k, v, kind="chunked", window=16,
+                             backend="interpret")
+    ref = attention_ref(q, k, v, kind="chunked", window=16)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+    # ragged T: 192 % min(128, 192) != 0 -> reference
+    q2, k2, v2 = _qkv_gqa(jax.random.PRNGKey(10), t=192)
+    out2 = dispatch_attention(q2, k2, v2, backend="interpret")
+    np.testing.assert_array_equal(np.asarray(out2),
+                                  np.asarray(attention_ref(q2, k2, v2)))
+
+
+# ---------------------------------------------------------------------------
 # rwkv6
 # ---------------------------------------------------------------------------
 

@@ -1,0 +1,200 @@
+"""The LM workload on the 2-D ("batch", "model") mesh.
+
+Acceptance pins for the sharded-LM sweep path:
+
+1. A tiny-config LM family sweep (fedpbc/fedavg/fedavg_all/fedavg_known_p,
+   swept lrs, 2 seeds) is bit-for-bit equal between ``mesh=None`` and the
+   2-D mesh on 8 forced host devices — including host-side train accuracy
+   and the in-scan evals (CI runs this file under
+   ``XLA_FLAGS=--xla_force_host_platform_device_count=8``; most tests skip
+   below 8 devices).
+2. Zero extra jit entries: the whole family sweep on the 2-D path compiles
+   exactly one (init, scan) pair (the compile-counter contract of
+   ``test_kernel_sweep.py``).
+3. Cohort mode (``cohort_size=C``, stateless clients) rides the same 2-D
+   path bit-for-bit.
+4. ``run_sharded_2d`` pads a ragged B to the mesh's batch axis and slices
+   the padding off on the host; it rejects runners not built for the mesh.
+5. ``spec_for_shape`` on a model-axis mesh covers every smollm-135m weight
+   leaf, and the pad-or-replicate fallback shards large uneven leaves
+   instead of silently replicating them (satellite of the same PR).
+"""
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.algorithms import algo_family
+from repro.experiments import SweepSpec, run_sweep
+from repro.experiments.grid import (
+    _runner_for,
+    get_traced_task,
+    make_cell_batch,
+)
+from repro.experiments.shard import run_sharded_2d
+from repro.launch.mesh import make_2d_mesh
+
+N_DEV = len(jax.devices())
+eight_devices = pytest.mark.skipif(
+    N_DEV < 8,
+    reason="needs 8 forced host devices "
+           "(XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+
+FAMILY = algo_family("fedavg")   # fedpbc/fedavg/fedavg_all/fedavg_known_p
+METRIC_KEYS = ("loss", "num_active")
+
+LM = SweepSpec(algorithms=FAMILY, schemes=("bernoulli_ti",), seeds=(0, 1),
+               rounds=3, eval_every=2, num_clients=4, local_steps=2,
+               batch_size=1, per_client=8, lrs=(0.05, 0.1),
+               task="lm", lm_d_model=32, lm_layers=1, lm_seq=16, classes=4,
+               lm_n_seqs=64, lm_n_test=16)
+
+
+def _cells_equal(a, b):
+    assert (a.algo, a.scheme, a.hparams, a.strategy) == \
+        (b.algo, b.scheme, b.hparams, b.strategy)
+    np.testing.assert_array_equal(a.test_acc, b.test_acc)
+    np.testing.assert_array_equal(a.train_acc, b.train_acc)
+    np.testing.assert_array_equal(a.loss, b.loss)
+    np.testing.assert_array_equal(a.num_active, b.num_active)
+
+
+@functools.lru_cache(maxsize=None)
+def _family_sweeps():
+    """One single-device + one 2-D-mesh run of the LM family sweep (shared
+    by the bitwise and compile-counter tests)."""
+    mesh = make_2d_mesh(4, 2, jax.devices()[:8])
+    plain = run_sweep(LM, metric_keys=METRIC_KEYS, mesh=None)
+    sharded = run_sweep(LM, metric_keys=METRIC_KEYS, mesh=mesh)
+    return plain, sharded, mesh
+
+
+def test_lm_sweep_runs_single_device():
+    """The LM task is a first-class sweep workload: rows come back in grid
+    order, the algorithm axis is live (members diverge), losses are
+    finite."""
+    spec = dataclasses.replace(LM, algorithms=("fedpbc", "fedavg"),
+                               seeds=(0,), lrs=(0.1,))
+    cells = run_sweep(spec, metric_keys=METRIC_KEYS, mesh=None)
+    assert [c.algo for c in cells] == ["fedpbc", "fedavg"]
+    for c in cells:
+        assert c.test_acc.shape == (1, 2)     # evals at rounds 2 and 3
+        assert np.isfinite(c.loss).all()
+    assert cells[0].loss.tobytes() != cells[1].loss.tobytes()
+
+
+@eight_devices
+def test_lm_family_sweep_2d_bit_for_bit():
+    """All 4 family members x 2 lrs x 2 seeds: every row of the 2-D-mesh
+    sweep equals the single-device sweep bitwise."""
+    plain, sharded, _ = _family_sweeps()
+    assert len(plain) == len(FAMILY) * len(LM.lrs)
+    for a, b in zip(plain, sharded):
+        _cells_equal(a, b)
+
+
+@eight_devices
+def test_lm_sweep_2d_zero_extra_jit_entries():
+    """The whole 4-member family sweep on the 2-D path compiles exactly one
+    (init, scan) pair: swept lrs, seeds and the algorithm axis all ride the
+    same program."""
+    _, _, mesh = _family_sweeps()
+    fed = LM.cell_config(FAMILY[0], "bernoulli_ti")
+    runner = _runner_for(LM, fed, get_traced_task(LM), METRIC_KEYS,
+                         shard_mesh=mesh)
+    assert runner.shard_mesh == mesh
+    if hasattr(runner.scan_batch, "_cache_size"):
+        assert runner.init_batch._cache_size() == 1
+        assert runner.scan_batch._cache_size() == 1
+
+
+@eight_devices
+def test_lm_cohort_2d_bit_for_bit():
+    """Cohort mode (stateless clients, per-round C-subsample — the
+    cross-device scale path) on the 2-D mesh equals its single-device
+    program bitwise."""
+    spec = dataclasses.replace(LM, algorithms=("fedpbc", "fedavg"),
+                               num_clients=8, cohort_size=2, seeds=(0,),
+                               lrs=(0.1,))
+    plain = run_sweep(spec, metric_keys=METRIC_KEYS, mesh=None)
+    mesh = make_2d_mesh(4, 2, jax.devices()[:8])
+    sharded = run_sweep(spec, metric_keys=METRIC_KEYS, mesh=mesh)
+    assert len(plain) == 2
+    for a, b in zip(plain, sharded):
+        _cells_equal(a, b)
+
+
+@eight_devices
+def test_run_sharded_2d_pads_ragged_batch():
+    """B = 3 trajectories on a batch axis of 4: padding rows are sliced off
+    on the host and the result equals the unsharded runner bitwise."""
+    spec = dataclasses.replace(LM, seeds=(0,), lrs=(0.1,))
+    task = get_traced_task(spec)
+    fed = spec.cell_config(FAMILY[0], "bernoulli_ti")
+    mesh = make_2d_mesh(4, 2, jax.devices()[:8])
+    batch = make_cell_batch(spec, fed, task, algos=FAMILY[:3])
+    assert batch.batch_size == 3
+    r2d = _runner_for(spec, fed, task, METRIC_KEYS, shard_mesh=mesh)
+    plain = _runner_for(spec, fed, task, METRIC_KEYS)
+    got = run_sharded_2d(r2d, batch, mesh)
+    want = plain(batch)
+    for x, y in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    # a runner built without the mesh is rejected up front
+    with pytest.raises(ValueError, match="not built for this mesh"):
+        run_sharded_2d(plain, batch, mesh)
+
+
+# ---------------------------------------------------------------------------
+# spec_for_shape over LM parameter shapes (the pad-or-replicate fallback)
+# ---------------------------------------------------------------------------
+
+
+@eight_devices
+def test_spec_for_shape_covers_smollm_weights():
+    """Every >=2-D weight leaf of the real smollm-135m init gets a "model"
+    entry on an 8-way model mesh (its dims all divide 8 — nothing should
+    silently replicate)."""
+    from jax.sharding import Mesh
+    from repro.configs import get_config
+    from repro.models.model import init_params
+    from repro.sharding.specs import spec_for_shape
+
+    mesh = Mesh(np.asarray(jax.devices()[:8]), ("model",))
+    cfg = get_config("smollm-135m")
+    shapes = jax.eval_shape(lambda k: init_params(k, cfg), jax.random.key(0))
+    leaves = jax.tree.leaves(shapes)
+    assert leaves, "smollm init produced no leaves"
+    for leaf in leaves:
+        spec = spec_for_shape(leaf.shape, mesh)
+        assert len(spec) == len(leaf.shape)
+        if leaf.ndim >= 2:
+            assert "model" in spec, (leaf.shape, spec)
+
+
+@eight_devices
+def test_spec_for_shape_uneven_fallback():
+    """No dim divides the 8-way model axis: the largest dim >= the axis
+    size is sharded anyway (GSPMD pads the ragged shard) instead of
+    replicating the whole leaf; dims smaller than the axis replicate."""
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+    from repro.sharding.specs import spec_for_shape
+
+    mesh = Mesh(np.asarray(jax.devices()[:8]), ("model",))
+    # 577 % 8 == 1535 % 8 != 0 -> fallback shards the LARGER dim
+    assert spec_for_shape((577, 1535), mesh) == P(None, "model")
+    assert spec_for_shape((49153, 577), mesh) == P("model", None)
+    # divisible dims keep the exact-shard preference (last divisible dim)
+    assert spec_for_shape((577, 1536), mesh) == P(None, "model")
+    # everything below the axis size replicates
+    assert spec_for_shape((7,), mesh) == P(None)
+    assert spec_for_shape((3, 5), mesh) == P(None, None)
+    # uneven specs are legal through with_sharding_constraint (NOT
+    # device_put / out_shardings): a jitted constraint commits the layout
+    sh = NamedSharding(mesh, spec_for_shape((577, 1535), mesh))
+    x = jnp.ones((577, 1535))
+    y = jax.jit(lambda a: jax.lax.with_sharding_constraint(a, sh) * 1.0)(x)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(x))
