@@ -1,0 +1,26 @@
+"""Trace-discipline tooling: tracelint (static) + sanitizers (runtime).
+
+Static half (stdlib-only, safe without jax installed)::
+
+    python -m repro.analysis.lint src benchmarks --baseline .tracelint-baseline.json
+
+Runtime half (imports jax lazily — ``from repro.analysis.sanitize import
+assert_no_new_compiles``).
+"""
+from repro.analysis.rules import RULES, Finding, Rule
+
+__all__ = ["RULES", "Finding", "Rule", "lint_paths", "lint_text",
+           "assert_no_new_compiles", "CompileSanitizer",
+           "DonationSanitizer"]
+
+
+def __getattr__(name):
+    # keep `import repro.analysis` jax-free; pull the heavy halves on demand
+    if name in {"lint_paths", "lint_text", "lint_file", "main"}:
+        from repro.analysis import lint
+        return getattr(lint, name)
+    if name in {"assert_no_new_compiles", "CompileSanitizer",
+                "DonationSanitizer", "cache_size", "donation_honored"}:
+        from repro.analysis import sanitize
+        return getattr(sanitize, name)
+    raise AttributeError(name)

@@ -1,0 +1,836 @@
+"""tracelint — AST static analysis for JAX trace discipline.
+
+Pure-stdlib (no jax import): cheap enough to run as the first CI job.
+
+The analysis is module-local and deliberately conservative in both
+directions: a *traced context* is a function the module's own text provably
+hands to a tracer (decorated with / passed to jit, vmap, pmap, grad,
+scan, fori_loop, while_loop, cond, switch, pallas_call — or any function
+lexically nested in one), plus the repo's ``round_fn`` convention, which is
+how the executor's round bodies travel (``core.federated`` attaches them to
+the scan by closure, invisibly to a structural scan).  Inside a traced
+context the taint sources are the function's own parameters and the params
+of traced ancestors; values reached only through ``.shape``/``.ndim``/
+``.dtype`` or ``len``/``isinstance`` are compile-time constants under
+tracing and are exempt, as is the ``x is None`` optional-argument pattern
+on a bare parameter (a static trace signature, not data-dependent control
+flow) — but ``x.attr is None`` is NOT exempt: reaching into an argument's
+internals belongs at build time.
+
+CLI::
+
+    python -m repro.analysis.lint src benchmarks \
+        --baseline .tracelint-baseline.json [--json] [--update-baseline]
+
+Exit status is 0 iff every finding is grandfathered by the baseline (or
+there are none); any *new* finding exits 1.
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import json
+import re
+import sys
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+from repro.analysis import baseline as baseline_lib
+from repro.analysis.rules import RULES, Finding, render_rule_table
+
+# ---------------------------------------------------------------------------
+# Traced-context discovery
+# ---------------------------------------------------------------------------
+
+_FuncNode = (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)
+
+#: wrapper names whose presence in a decorator marks the function traced
+TRACE_WRAPPERS = {"jit", "vmap", "pmap", "grad", "value_and_grad",
+                  "checkpoint", "remat", "pallas_call", "custom_vjp",
+                  "custom_jvp"}
+
+#: call name -> positional indices holding traced callables
+TRACED_CALLEE_ARGS: Dict[str, Tuple[int, ...]] = {
+    "scan": (0,), "fori_loop": (2,), "while_loop": (0, 1),
+    "cond": (1, 2), "switch": (1,),
+    "jit": (0,), "vmap": (0,), "pmap": (0,),
+    "grad": (0,), "value_and_grad": (0,),
+    "checkpoint": (0,), "remat": (0,), "pallas_call": (0,),
+}
+
+#: attribute accesses that yield compile-time constants under tracing
+SHAPE_ATTRS = {"shape", "ndim", "dtype", "size", "aval", "sharding"}
+
+#: calls whose results are static regardless of traced arguments
+STATIC_CALLS = {"len", "isinstance", "type", "hasattr", "getattr",
+                "eval_shape", "tree_structure"}
+
+HOST_SYNC_METHODS = {"item", "block_until_ready", "tolist"}
+NUMPY_ALIASES = {"np", "numpy", "onp"}
+HPARAM_ATTRS = {"lr", "lrs", "gamma", "alpha", "sigma0", "delta"}
+CANON_ZEROED = {"alpha", "sigma0", "delta", "gamma"}
+PYTREE_ANN = re.compile(r"\b(?:jnp\.ndarray|jax\.Array|Array|ArrayLike"
+                        r"|Pytree|PyTree)\b")
+RUNNER_CACHE_NAME = re.compile(r"^_?[A-Z_]*RUNNER_CACHE[A-Z_]*$")
+REDUCTION_CALLS = {"dot", "dot_general", "matmul", "einsum", "sum",
+                   "cumsum"}
+
+SUPPRESS_RE = re.compile(
+    r"#\s*tracelint:\s*disable=([A-Z0-9,\s]+?)\s*(?:--\s*(\S.*))?$")
+
+
+def _names(expr: ast.AST) -> Set[str]:
+    """All Name ids and Attribute attrs in ``expr`` (a loose identifier
+    bag: `jax.lax.scan` -> {'jax', 'lax', 'scan'})."""
+    out: Set[str] = set()
+    for node in ast.walk(expr):
+        if isinstance(node, ast.Name):
+            out.add(node.id)
+        elif isinstance(node, ast.Attribute):
+            out.add(node.attr)
+    return out
+
+
+def _callable_refs(expr: ast.AST) -> Tuple[List[ast.AST], List[str]]:
+    """Resolve a callable-position argument to (lambda nodes, names),
+    looking through functools.partial and callable lists."""
+    if isinstance(expr, ast.Lambda):
+        return [expr], []
+    if isinstance(expr, ast.Name):
+        return [], [expr.id]
+    if isinstance(expr, ast.Call) and "partial" in _names(expr.func) \
+            and expr.args:
+        return _callable_refs(expr.args[0])
+    if isinstance(expr, (ast.List, ast.Tuple)):
+        nodes: List[ast.AST] = []
+        names: List[str] = []
+        for elt in expr.elts:
+            n, m = _callable_refs(elt)
+            nodes += n
+            names += m
+    else:
+        nodes, names = [], []
+    return nodes, names
+
+
+class _Module:
+    """Parsed module plus the maps every check needs."""
+
+    def __init__(self, tree: ast.Module, path: str, source: str):
+        self.tree = tree
+        self.path = path
+        self.lines = source.splitlines()
+        self.parent: Dict[ast.AST, ast.AST] = {}
+        for node in ast.walk(tree):
+            for child in ast.iter_child_nodes(node):
+                self.parent[child] = node
+        self.functions = [n for n in ast.walk(tree)
+                          if isinstance(n, _FuncNode)]
+        self.defs_by_name: Dict[str, List[ast.AST]] = {}
+        for fn in self.functions:
+            if not isinstance(fn, ast.Lambda):
+                self.defs_by_name.setdefault(fn.name, []).append(fn)
+        self.traced_roots: Set[ast.AST] = set()
+        self.kernel_roots: Set[ast.AST] = set()
+        #: per-function params pinned static by jit (static_argnames/nums):
+        #: compile constants, NOT taint sources
+        self.static_params: Dict[ast.AST, Set[str]] = {}
+        self._discover_traced()
+
+    # -- traced-context discovery -------------------------------------
+    def _discover_traced(self) -> None:
+        for fn in self.functions:
+            if not isinstance(fn, ast.Lambda):
+                for dec in fn.decorator_list:
+                    if _names(dec) & TRACE_WRAPPERS:
+                        self.traced_roots.add(fn)
+                        self._note_static_params(fn, dec)
+                # the executor's round bodies travel by closure, invisibly
+                # to a structural scan — catch them by convention (but not
+                # their make_* factories)
+                name = fn.name
+                if name == "round_fn" or (name.endswith("_round_fn")
+                                          and "make" not in name):
+                    self.traced_roots.add(fn)
+        for call in ast.walk(self.tree):
+            if not isinstance(call, ast.Call):
+                continue
+            fnames = _names(call.func)
+            for key, positions in TRACED_CALLEE_ARGS.items():
+                if key not in fnames:
+                    continue
+                for pos in positions:
+                    if pos >= len(call.args):
+                        continue
+                    nodes, names = _callable_refs(call.args[pos])
+                    for node in nodes:
+                        self.traced_roots.add(node)
+                        if key == "pallas_call":
+                            self.kernel_roots.add(node)
+                    for name in names:
+                        for target in self.defs_by_name.get(name, []):
+                            self.traced_roots.add(target)
+                            if key == "pallas_call":
+                                self.kernel_roots.add(target)
+                            if key == "jit":
+                                self._note_static_params(target, call)
+
+    def _note_static_params(self, fn: ast.AST, wrapper: ast.AST) -> None:
+        """Record params of ``fn`` pinned static by a jit wrapper
+        (decorator or call site) via static_argnames / static_argnums."""
+        if not isinstance(wrapper, ast.Call) \
+                or "jit" not in _names(wrapper):
+            return
+        ordered = [a.arg for a in fn.args.posonlyargs + fn.args.args]
+        static: Set[str] = set()
+        for kw in wrapper.keywords:
+            if kw.arg == "static_argnames":
+                for node in ast.walk(kw.value):
+                    if isinstance(node, ast.Constant) \
+                            and isinstance(node.value, str):
+                        static.add(node.value)
+            elif kw.arg == "static_argnums":
+                for node in ast.walk(kw.value):
+                    if isinstance(node, ast.Constant) \
+                            and isinstance(node.value, int) \
+                            and node.value < len(ordered):
+                        static.add(ordered[node.value])
+        if static:
+            self.static_params.setdefault(fn, set()).update(static)
+
+    def enclosing_fn(self, node: ast.AST) -> Optional[ast.AST]:
+        cur = self.parent.get(node)
+        while cur is not None and not isinstance(cur, _FuncNode):
+            cur = self.parent.get(cur)
+        return cur
+
+    def fn_chain(self, fn: ast.AST) -> List[ast.AST]:
+        """``fn`` plus its lexically enclosing functions, innermost first."""
+        chain = [fn]
+        cur = self.enclosing_fn(fn)
+        while cur is not None:
+            chain.append(cur)
+            cur = self.enclosing_fn(cur)
+        return chain
+
+    def is_traced(self, fn: ast.AST) -> bool:
+        return any(f in self.traced_roots for f in self.fn_chain(fn))
+
+    def line_text(self, lineno: int) -> str:
+        if 1 <= lineno <= len(self.lines):
+            return self.lines[lineno - 1].strip()
+        return ""
+
+
+# ---------------------------------------------------------------------------
+# Taint: values derived from a traced function's parameters
+# ---------------------------------------------------------------------------
+
+
+def _param_names(fn: ast.AST) -> Set[str]:
+    if isinstance(fn, ast.Lambda):
+        args = fn.args
+    else:
+        args = fn.args
+    names = {a.arg for a in
+             args.posonlyargs + args.args + args.kwonlyargs}
+    if args.vararg:
+        names.add(args.vararg.arg)
+    if args.kwarg:
+        names.add(args.kwarg.arg)
+    names.discard("self")
+    names.discard("cls")
+    return names
+
+
+def _tainted_names_in(expr: ast.AST, tainted: Set[str]) -> Set[str]:
+    """Tainted Name ids genuinely contributing to ``expr``: subtrees
+    reached only through shape/dtype access, static builtins, or the
+    ``param is None`` pattern do not count."""
+    out: Set[str] = set()
+
+    def visit(node: ast.AST) -> None:
+        if isinstance(node, ast.Attribute) and node.attr in SHAPE_ATTRS:
+            return
+        if isinstance(node, ast.Call) and (_names(node.func) & STATIC_CALLS):
+            return
+        if isinstance(node, ast.Compare) \
+                and isinstance(node.left, ast.Name) \
+                and all(isinstance(op, (ast.Is, ast.IsNot))
+                        for op in node.ops) \
+                and all(isinstance(c, ast.Constant) and c.value is None
+                        for c in node.comparators):
+            return
+        if isinstance(node, ast.Name) and node.id in tainted:
+            out.add(node.id)
+        for child in ast.iter_child_nodes(node):
+            visit(child)
+
+    visit(expr)
+    return out
+
+
+def _assign_targets(node: ast.AST) -> Set[str]:
+    """Names (re)bound by an assignment-like statement."""
+    out: Set[str] = set()
+
+    def collect(t: ast.AST) -> None:
+        if isinstance(t, ast.Name):
+            out.add(t.id)
+        elif isinstance(t, (ast.Tuple, ast.List)):
+            for e in t.elts:
+                collect(e)
+        elif isinstance(t, ast.Starred):
+            collect(t.value)
+
+    if isinstance(node, ast.Assign):
+        for t in node.targets:
+            collect(t)
+    elif isinstance(node, (ast.AugAssign, ast.AnnAssign)):
+        collect(node.target)
+    elif isinstance(node, ast.For):
+        collect(node.target)
+    return out
+
+
+def _function_taint(mod: _Module, fn: ast.AST) -> Set[str]:
+    """Parameter taint for ``fn``, including params inherited from traced
+    ancestors (closure reads of a *non*-traced factory are compile
+    constants and stay clean), propagated through local assignments."""
+    tainted: Set[str] = set()
+    for f in mod.fn_chain(fn):
+        if mod.is_traced(f):
+            tainted |= _param_names(f) - mod.static_params.get(f, set())
+    for _ in range(2):          # two passes reach chained assignments
+        for node in ast.walk(fn):
+            if isinstance(node, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+                value = node.value
+                if value is not None and _tainted_names_in(value, tainted):
+                    tainted |= _assign_targets(node)
+            elif isinstance(node, ast.For):
+                if _tainted_names_in(node.iter, tainted):
+                    tainted |= _assign_targets(node)
+    return tainted
+
+
+# ---------------------------------------------------------------------------
+# R001 / R002 — traced-context discipline
+# ---------------------------------------------------------------------------
+
+
+def _check_traced_contexts(mod: _Module, findings: List[Finding]) -> None:
+    taint_cache: Dict[ast.AST, Set[str]] = {}
+
+    def taint_for(fn: ast.AST) -> Set[str]:
+        if fn not in taint_cache:
+            taint_cache[fn] = _function_taint(mod, fn)
+        return taint_cache[fn]
+
+    for node in ast.walk(mod.tree):
+        fn = mod.enclosing_fn(node)
+        if fn is None or not mod.is_traced(fn):
+            continue
+        if isinstance(node, (ast.If, ast.While, ast.Assert)):
+            names = _tainted_names_in(node.test, taint_for(fn))
+            if names:
+                findings.append(Finding(
+                    mod.path, node.lineno, "R001",
+                    f"Python {type(node).__name__.lower()} on traced "
+                    f"value(s) {sorted(names)} inside a traced context; "
+                    f"hoist to build time or use lax.cond/jnp.where",
+                    mod.line_text(node.lineno)))
+        elif isinstance(node, ast.Call):
+            _check_host_sync(mod, node, taint_for(fn), findings)
+
+
+def _check_host_sync(mod: _Module, call: ast.Call, tainted: Set[str],
+                     findings: List[Finding]) -> None:
+    func = call.func
+
+    def hit(what: str) -> None:
+        findings.append(Finding(
+            mod.path, call.lineno, "R002",
+            f"{what} inside a traced context (scan body / round fn / jit "
+            f"body) forces a host sync or fails under tracing",
+            mod.line_text(call.lineno)))
+
+    if isinstance(func, ast.Attribute):
+        if func.attr in HOST_SYNC_METHODS:
+            hit(f".{func.attr}()")
+            return
+        if func.attr == "device_get":
+            hit("jax.device_get")
+            return
+        if func.attr in {"asarray", "array"} \
+                and isinstance(func.value, ast.Name) \
+                and func.value.id in NUMPY_ALIASES \
+                and call.args \
+                and _tainted_names_in(call.args[0], tainted):
+            hit(f"{func.value.id}.{func.attr} on a traced value")
+            return
+    elif isinstance(func, ast.Name):
+        if func.id == "print":
+            hit("print (use jax.debug.print)")
+        elif func.id in {"int", "float", "bool"} and call.args \
+                and _tainted_names_in(call.args[0], tainted):
+            hit(f"{func.id}() on a traced value")
+
+
+# ---------------------------------------------------------------------------
+# R003 — structure-only runner-cache keys
+# ---------------------------------------------------------------------------
+
+
+def _check_cache_keys(mod: _Module, findings: List[Finding]) -> None:
+    cache_vars = {
+        t.id
+        for node in ast.walk(mod.tree)
+        if isinstance(node, (ast.Assign, ast.AnnAssign))
+        for t in ([t for t in node.targets if isinstance(t, ast.Name)]
+                  if isinstance(node, ast.Assign)
+                  else ([node.target]
+                        if isinstance(node.target, ast.Name) else []))
+        if RUNNER_CACHE_NAME.match(t.id)
+    }
+    if not cache_vars:
+        return
+
+    def key_exprs_for(fn: ast.AST) -> List[ast.AST]:
+        """Key expressions used against a runner cache inside ``fn``."""
+        keys = []
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Subscript) \
+                    and isinstance(node.value, ast.Name) \
+                    and node.value.id in cache_vars:
+                keys.append(node.slice)
+            elif isinstance(node, ast.Call) \
+                    and isinstance(node.func, ast.Attribute) \
+                    and isinstance(node.func.value, ast.Name) \
+                    and node.func.value.id in cache_vars \
+                    and node.func.attr in {"get", "setdefault", "pop"} \
+                    and node.args:
+                keys.append(node.args[0])
+            elif isinstance(node, ast.Compare) \
+                    and any(isinstance(c, ast.Name) and c.id in cache_vars
+                            for c in node.comparators) \
+                    and any(isinstance(op, (ast.In, ast.NotIn))
+                            for op in node.ops):
+                keys.append(node.left)
+        return keys
+
+    def local_assign(fn: ast.AST, name: str) -> Optional[ast.AST]:
+        last = None
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Assign) and node.targets \
+                    and any(isinstance(t, ast.Name) and t.id == name
+                            for t in node.targets):
+                last = node.value
+        return last
+
+    for fn in mod.functions:
+        if isinstance(fn, ast.Lambda):
+            continue
+        for key in key_exprs_for(fn):
+            exprs = [key]
+            if isinstance(key, ast.Name):
+                resolved = local_assign(fn, key.id)
+                exprs = [resolved] if resolved is not None else []
+            for expr in exprs:
+                _audit_key_expr(mod, fn, expr, findings)
+
+
+def _audit_key_expr(mod: _Module, fn: ast.AST, expr: ast.AST,
+                    findings: List[Finding]) -> None:
+    def local_assign(name: str) -> Optional[ast.AST]:
+        last = None
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Assign) \
+                    and any(isinstance(t, ast.Name) and t.id == name
+                            for t in node.targets):
+                last = node.value
+        return last
+
+    for node in ast.walk(expr):
+        if isinstance(node, ast.Attribute) and node.attr in HPARAM_ATTRS:
+            findings.append(Finding(
+                mod.path, expr.lineno, "R003",
+                f"hyperparameter '.{node.attr}' reaches a runner-cache key; "
+                f"grid.py promises runner keys are structure-only "
+                f"(hparams ride the traced axis)",
+                mod.line_text(expr.lineno)))
+        elif isinstance(node, ast.Name):
+            value = local_assign(node.id)
+            if isinstance(value, ast.Call) \
+                    and "replace" in _names(value.func):
+                zeroed = {kw.arg for kw in value.keywords
+                          if kw.arg and isinstance(kw.value, ast.Constant)}
+                missing = CANON_ZEROED - zeroed
+                if missing:
+                    findings.append(Finding(
+                        mod.path, value.lineno, "R003",
+                        f"replace() canonicalizing a runner-cache key "
+                        f"leaves {sorted(missing)} unzeroed; cells "
+                        f"differing only in hparams would stop sharing "
+                        f"one compiled runner",
+                        mod.line_text(value.lineno)))
+            # expand local `*_key(...)` helper calls one level
+        if isinstance(node, ast.Call) and isinstance(node.func, ast.Name) \
+                and node.func.id.endswith("_key"):
+            for helper in mod.defs_by_name.get(node.func.id, []):
+                for sub in ast.walk(helper):
+                    if isinstance(sub, ast.Attribute) \
+                            and sub.attr in HPARAM_ATTRS:
+                        findings.append(Finding(
+                            mod.path, sub.lineno, "R003",
+                            f"key helper {node.func.id}() folds "
+                            f"hyperparameter '.{sub.attr}' into a "
+                            f"runner-cache key",
+                            mod.line_text(sub.lineno)))
+
+
+# ---------------------------------------------------------------------------
+# R004 — pytree registration for dataclasses crossing jit
+# ---------------------------------------------------------------------------
+
+REGISTER_CALLS = {"register_dataclass", "register_pytree_node",
+                  "register_pytree_node_class", "register_static",
+                  "register_pytree_with_keys", "register_pytree_with_keys_class"}
+
+
+def _check_dataclass_registration(mod: _Module,
+                                  findings: List[Finding]) -> None:
+    registered: Set[str] = set()
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.Call) and (_names(node.func)
+                                           & REGISTER_CALLS):
+            for arg in node.args:
+                if isinstance(arg, ast.Name):
+                    registered.add(arg.id)
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.ClassDef):
+            continue
+        dec_names = set()
+        for dec in node.decorator_list:
+            dec_names |= _names(dec)
+        if "dataclass" not in dec_names:
+            continue
+        if node.name in registered or (dec_names & REGISTER_CALLS):
+            continue
+        array_fields = []
+        for stmt in node.body:
+            if isinstance(stmt, ast.AnnAssign) \
+                    and isinstance(stmt.target, ast.Name):
+                ann = ast.unparse(stmt.annotation)
+                # Callable fields are behavior, not data — a pytree name in
+                # their signature doesn't put arrays in the instance
+                if PYTREE_ANN.search(ann) and "Callable" not in ann:
+                    array_fields.append(stmt.target.id)
+        if array_fields:
+            findings.append(Finding(
+                mod.path, node.lineno, "R004",
+                f"dataclass {node.name} has array/pytree fields "
+                f"{array_fields} but no jax.tree_util registration; it "
+                f"cannot cross a jit boundary as an argument",
+                mod.line_text(node.lineno)))
+
+
+# ---------------------------------------------------------------------------
+# R005 — donated-buffer reuse
+# ---------------------------------------------------------------------------
+
+
+def _donated_positions(call: ast.Call) -> Optional[Tuple[int, ...]]:
+    """donate_argnums positions when ``call`` is a jit(...) with a constant
+    donate spec, else None."""
+    if "jit" not in _names(call.func):
+        return None
+    for kw in call.keywords:
+        if kw.arg != "donate_argnums":
+            continue
+        v = kw.value
+        if isinstance(v, ast.Constant) and isinstance(v.value, int):
+            return (v.value,)
+        if isinstance(v, (ast.Tuple, ast.List)) \
+                and all(isinstance(e, ast.Constant)
+                        and isinstance(e.value, int) for e in v.elts):
+            return tuple(e.value for e in v.elts)
+        return None             # conditional / computed spec: skip
+    return None
+
+
+def _check_donation(mod: _Module, findings: List[Finding]) -> None:
+    donated_fns: Dict[str, Tuple[int, ...]] = {}
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+            pos = _donated_positions(node.value)
+            if pos:
+                for t in node.targets:
+                    if isinstance(t, ast.Name):
+                        donated_fns[t.id] = pos
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                if isinstance(dec, ast.Call):
+                    pos = _donated_positions(dec)
+                    if pos:
+                        donated_fns[node.name] = pos
+    if not donated_fns:
+        return
+
+    def scan_block(stmts: Sequence[ast.stmt]) -> None:
+        stale: Dict[str, int] = {}      # name -> donation line
+        for stmt in stmts:
+            for name in sorted(stale):
+                for node in ast.walk(stmt):
+                    if isinstance(node, ast.Name) and node.id == name \
+                            and isinstance(node.ctx, ast.Load):
+                        findings.append(Finding(
+                            mod.path, node.lineno, "R005",
+                            f"'{name}' was donated on line {stale[name]} "
+                            f"(donate_argnums) and is read again; the "
+                            f"buffer may already be freed",
+                            mod.line_text(node.lineno)))
+                        del stale[name]
+                        break
+            rebound = _assign_targets(stmt)
+            for name in rebound:
+                stale.pop(name, None)
+            for node in ast.walk(stmt):
+                if isinstance(node, ast.Call) \
+                        and isinstance(node.func, ast.Name) \
+                        and node.func.id in donated_fns:
+                    for pos in donated_fns[node.func.id]:
+                        if pos < len(node.args) \
+                                and isinstance(node.args[pos], ast.Name):
+                            arg = node.args[pos].id
+                            if arg not in rebound:
+                                stale[arg] = node.lineno
+        # end of block: stale entries die with the scope
+
+    for fn in mod.functions:
+        if not isinstance(fn, ast.Lambda):
+            scan_block(fn.body)
+    scan_block(mod.tree.body)
+
+
+# ---------------------------------------------------------------------------
+# R006 — Pallas kernel hygiene (kernels/ only)
+# ---------------------------------------------------------------------------
+
+
+def _check_kernel_hygiene(mod: _Module, findings: List[Finding],
+                          dispatch_src: Optional[str]) -> None:
+    if "kernels" not in Path(mod.path).parts:
+        return
+    pallas_fns = [
+        fn for fn in mod.functions
+        if any(isinstance(c, ast.Call) and "pallas_call" in _names(c.func)
+               for c in ast.walk(fn))
+    ]
+    for fn in pallas_fns:
+        mods_present: Set[str] = set()
+        for node in ast.walk(fn):
+            if isinstance(node, ast.BinOp) and isinstance(node.op, ast.Mod):
+                mods_present |= {n.id for n in (node.left, node.right)
+                                 if isinstance(n, ast.Name)}
+            elif isinstance(node, ast.Call) and "cdiv" in _names(node.func):
+                mods_present |= _names(node)
+        for node in ast.walk(fn):
+            if isinstance(node, ast.BinOp) \
+                    and isinstance(node.op, ast.FloorDiv) \
+                    and isinstance(node.right, ast.Name) \
+                    and node.right.id not in mods_present:
+                findings.append(Finding(
+                    mod.path, node.lineno, "R006",
+                    f"grid floordiv by '{node.right.id}' without a "
+                    f"matching divisibility guard (% check, padding, or "
+                    f"pl.cdiv) in the same function",
+                    mod.line_text(node.lineno)))
+    for kfn in mod.kernel_roots:
+        params = _param_names(kfn)
+        for node in ast.walk(kfn):
+            if isinstance(node, (ast.If, ast.While, ast.Assert)):
+                shape_on_param = any(
+                    isinstance(a, ast.Attribute) and a.attr == "shape"
+                    and isinstance(a.value, ast.Name) and a.value.id in params
+                    for a in ast.walk(node.test))
+                if shape_on_param:
+                    findings.append(Finding(
+                        mod.path, node.lineno, "R006",
+                        "Python branching on a ref shape inside a Pallas "
+                        "kernel body; block shapes are fixed by the "
+                        "BlockSpec — resolve this at wrapper level",
+                        mod.line_text(node.lineno)))
+        has_reduction = any(
+            isinstance(n, ast.Call) and (_names(n.func) & REDUCTION_CALLS)
+            for n in ast.walk(kfn))
+        if has_reduction:
+            fp32_evidence = any(
+                ("float32" in _names(n))
+                or (isinstance(n, ast.keyword)
+                    and n.arg == "preferred_element_type")
+                for n in ast.walk(kfn))
+            if not fp32_evidence:
+                findings.append(Finding(
+                    mod.path, kfn.lineno, "R006",
+                    f"kernel '{getattr(kfn, 'name', '<lambda>')}' reduces "
+                    f"without visible fp32 accumulation (.astype("
+                    f"jnp.float32) or preferred_element_type); bf16 "
+                    f"leaves lose precision",
+                    mod.line_text(kfn.lineno)))
+    stem = Path(mod.path).stem
+    if pallas_fns and dispatch_src is not None \
+            and stem not in {"dispatch", "__init__"} \
+            and stem not in dispatch_src:
+        findings.append(Finding(
+            mod.path, 1, "R006",
+            f"kernel module '{stem}' defines pallas_call but is not "
+            f"routed through kernels/dispatch (no backend selection, "
+            f"no interpret-mode fallback policy)",
+            mod.line_text(1)))
+
+
+# ---------------------------------------------------------------------------
+# Suppressions + driver
+# ---------------------------------------------------------------------------
+
+
+def _suppressions(source: str) -> Dict[int, Tuple[Set[str], bool]]:
+    """line -> (codes, has_justification) for `# tracelint: disable=...`."""
+    out: Dict[int, Tuple[Set[str], bool]] = {}
+    for i, line in enumerate(source.splitlines(), start=1):
+        m = SUPPRESS_RE.search(line)
+        if m:
+            codes = {c.strip() for c in m.group(1).split(",") if c.strip()}
+            out[i] = (codes, m.group(2) is not None)
+    return out
+
+
+def lint_text(source: str, path: str,
+              dispatch_src: Optional[str] = None) -> List[Finding]:
+    """Lint one module's source. ``path`` drives the kernels/-scoped checks;
+    ``dispatch_src`` is the sibling dispatch.py source when it exists."""
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as exc:
+        return [Finding(path, exc.lineno or 1, "R000",
+                        f"syntax error: {exc.msg}")]
+    mod = _Module(tree, path, source)
+    findings: List[Finding] = []
+    _check_traced_contexts(mod, findings)
+    _check_cache_keys(mod, findings)
+    _check_dataclass_registration(mod, findings)
+    _check_donation(mod, findings)
+    _check_kernel_hygiene(mod, findings, dispatch_src)
+
+    sup = _suppressions(source)
+    kept: List[Finding] = []
+    seen: Set[Tuple[int, str, str]] = set()
+    for f in findings:
+        codes, _ = sup.get(f.line, (set(), False))
+        if f.rule in codes or "ALL" in codes:
+            continue
+        key = (f.line, f.rule, f.message)
+        if key in seen:
+            continue
+        seen.add(key)
+        kept.append(f)
+    for line, (codes, justified) in sorted(sup.items()):
+        if not justified:
+            kept.append(Finding(
+                path, line, "R000",
+                f"suppression of {sorted(codes)} lacks a justification "
+                f"(`# tracelint: disable=RXXX -- why`)",
+                mod.line_text(line)))
+    kept.sort(key=lambda f: (f.line, f.rule))
+    return kept
+
+
+def lint_file(path: Path, root: Optional[Path] = None) -> List[Finding]:
+    rel = str(path.relative_to(root)) if root else str(path)
+    dispatch = path.parent / "dispatch.py"
+    dispatch_src = dispatch.read_text() \
+        if (dispatch.exists() and path.name != "dispatch.py") else None
+    return lint_text(path.read_text(), rel, dispatch_src=dispatch_src)
+
+
+def iter_py_files(paths: Sequence[str]) -> Iterable[Path]:
+    for p in paths:
+        path = Path(p)
+        if path.is_file() and path.suffix == ".py":
+            yield path
+        elif path.is_dir():
+            for f in sorted(path.rglob("*.py")):
+                if "__pycache__" not in f.parts \
+                        and not any(part.startswith(".") for part in f.parts):
+                    yield f
+
+
+def lint_paths(paths: Sequence[str],
+               root: Optional[Path] = None) -> List[Finding]:
+    findings: List[Finding] = []
+    for f in iter_py_files(paths):
+        findings.extend(lint_file(f, root=root))
+    findings.sort(key=lambda f: (f.file, f.line, f.rule))
+    return findings
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="tracelint: trace-discipline static analysis")
+    parser.add_argument("paths", nargs="*", default=["src", "benchmarks"])
+    parser.add_argument("--baseline", type=Path, default=None,
+                        help="grandfathered-findings file; new findings "
+                             "still fail")
+    parser.add_argument("--update-baseline", action="store_true",
+                        help="rewrite the baseline from current findings "
+                             "(keeps existing justifications)")
+    parser.add_argument("--json", action="store_true", dest="as_json")
+    parser.add_argument("--list-rules", action="store_true")
+    args = parser.parse_args(argv)
+
+    if args.list_rules:
+        print(render_rule_table())
+        return 0
+
+    findings = lint_paths(args.paths or ["src", "benchmarks"])
+
+    old = baseline_lib.load(args.baseline) if args.baseline else {}
+    if args.update_baseline:
+        if args.baseline is None:
+            parser.error("--update-baseline requires --baseline")
+        baseline_lib.save(args.baseline, findings, old)
+        print(f"baseline written: {len(findings)} finding(s) -> "
+              f"{args.baseline}")
+        return 0
+
+    new, grandfathered, stale = baseline_lib.partition(findings, old)
+
+    if args.as_json:
+        counts: Dict[str, int] = {}
+        for f in new:
+            counts[f.rule] = counts.get(f.rule, 0) + 1
+        print(json.dumps({
+            "findings": [f.to_dict() for f in new],
+            "grandfathered": len(grandfathered),
+            "stale_baseline_entries": sorted(stale),
+            "counts": counts,
+        }, indent=2))
+    else:
+        for f in new:
+            print(f.render())
+        if grandfathered:
+            print(f"[tracelint] {len(grandfathered)} grandfathered "
+                  f"finding(s) suppressed by baseline", file=sys.stderr)
+        for fp in sorted(stale):
+            print(f"[tracelint] stale baseline entry {fp} (finding gone — "
+                  f"run --update-baseline to prune)", file=sys.stderr)
+        if new:
+            print(f"[tracelint] {len(new)} new finding(s)", file=sys.stderr)
+        else:
+            print("[tracelint] clean", file=sys.stderr)
+    return 1 if new else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

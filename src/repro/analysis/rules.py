@@ -1,0 +1,80 @@
+"""The tracelint rule registry.
+
+Every rule encodes one invariant the sweep stack's performance story rests
+on (ROADMAP: one compiled program per (family x strategy x point x seed)
+cell, zero extra jit entries).  The linter (``repro.analysis.lint``) walks
+``src/repro`` and ``benchmarks`` and reports violations as ``Finding``s with
+these codes; the runtime half (``repro.analysis.sanitize``) checks the same
+invariants dynamically.
+
+Suppression syntax (per line, justification required)::
+
+    risky_call()  # tracelint: disable=R002 -- host path, runs outside jit
+
+A ``tracelint:`` comment without the ``-- justification`` tail is itself a
+finding (R000), so every grandfathered line documents *why*.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict
+
+
+@dataclass(frozen=True)
+class Rule:
+    code: str
+    name: str
+    summary: str
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One linter hit: ``file:line: code message``."""
+
+    file: str
+    line: int
+    rule: str
+    message: str
+    line_text: str = ""
+
+    def render(self) -> str:
+        return f"{self.file}:{self.line}: {self.rule} {self.message}"
+
+    def to_dict(self) -> Dict[str, object]:
+        return {"file": self.file, "line": self.line, "rule": self.rule,
+                "message": self.message}
+
+
+RULES: Dict[str, Rule] = {r.code: r for r in [
+    Rule("R000", "suppression-hygiene",
+         "a `# tracelint: disable=...` comment must carry a "
+         "`-- justification` tail"),
+    Rule("R001", "traced-python-branch",
+         "Python if/while/assert on a value derived from a traced function's "
+         "parameters (each branch value forces a retrace or a concretization "
+         "error); hoist the check to build time or use lax.cond/select"),
+    Rule("R002", "host-sync-in-trace",
+         "host-synchronizing call (.item(), int()/float()/bool() on traced "
+         "values, np.asarray, jax.device_get, block_until_ready, print) "
+         "inside a scan body / round fn / jit body"),
+    Rule("R003", "hparam-in-runner-cache-key",
+         "swept hyperparameter (lr/gamma/alpha/sigma0/delta) reaches a "
+         "runner-cache key that grid.py promises is structure-only"),
+    Rule("R004", "unregistered-pytree-dataclass",
+         "dataclass with array/pytree fields crosses a jit boundary without "
+         "jax.tree_util registration"),
+    Rule("R005", "donated-buffer-reuse",
+         "argument passed to a donate_argnums position is read again after "
+         "the call; the buffer may already be freed"),
+    Rule("R006", "pallas-kernel-hygiene",
+         "Pallas kernel hygiene: grid-divisibility guard missing, Python "
+         "branching on ref shapes inside the kernel, reductions without "
+         "fp32 accumulation, or a kernel module not routed through "
+         "kernels/dispatch"),
+]}
+
+
+def render_rule_table() -> str:
+    width = max(len(r.name) for r in RULES.values())
+    return "\n".join(f"{r.code}  {r.name:<{width}}  {r.summary}"
+                     for r in RULES.values())

@@ -1,0 +1,158 @@
+"""Runtime sanitizers: the dynamic half of the trace-discipline gate.
+
+``CompileSanitizer`` / ``assert_no_new_compiles`` generalize the ad-hoc
+``_cache_size()`` assertions the test suite grew per file: the sweep
+engine's contract is ONE compiled (init, scan) pair per (family x scheme)
+runner no matter how many hparam points / seeds / strategies ride the
+traced axes, and these helpers pin it in one idiom.
+
+Two modes, one entry point::
+
+    # exact-total (the test-suite pin): check immediately
+    assert_no_new_compiles(run.init_batch, run.scan_batch, expect_total=1)
+
+    # delta (wrap a region that must not retrace): context manager
+    with assert_no_new_compiles(run.scan_batch):
+        run.scan_batch(more_points)     # new hparam values are free
+
+Both modes no-op gracefully when a function does not expose jit's
+``_cache_size`` introspection (e.g. a plain python callable or a jax
+version without it) — mirroring the ``hasattr`` guards they replace.
+
+``DonationSanitizer`` checks that buffers handed to ``donate_argnums``
+positions were actually consumed (``is_deleted``), skipping on backends
+that ignore donation (CPU).
+"""
+from __future__ import annotations
+
+from typing import Any, List, Optional, Sequence
+
+import jax
+
+
+def cache_size(fn: Any) -> Optional[int]:
+    """jit-cache entry count for ``fn``, or None when the introspection
+    hook is unavailable."""
+    probe = getattr(fn, "_cache_size", None)
+    return probe() if callable(probe) else None
+
+
+class CompileSanitizer:
+    """Pins the jit-cache growth of one or more compiled callables.
+
+    ``expect_total=N``: every function's cache must hold exactly N entries
+    at check time.  ``expect_total=None``: at most ``max_new`` entries may
+    appear between construction (snapshot) and check — use as a context
+    manager around a region that must not retrace.
+    """
+
+    def __init__(self, *fns: Any, expect_total: Optional[int] = None,
+                 max_new: int = 0, label: str = ""):
+        if not fns:
+            raise ValueError("CompileSanitizer needs at least one callable")
+        self.fns = fns
+        self.expect_total = expect_total
+        self.max_new = max_new
+        self.label = label
+        self._start: List[Optional[int]] = [cache_size(f) for f in fns]
+
+    @property
+    def has_introspection(self) -> bool:
+        """True when every wrapped callable exposes ``_cache_size``."""
+        return all(s is not None for s in self._start)
+
+    def check(self) -> "CompileSanitizer":
+        tag = f" [{self.label}]" if self.label else ""
+        for fn, start in zip(self.fns, self._start):
+            now = cache_size(fn)
+            if now is None:
+                continue            # no introspection: nothing to pin
+            name = getattr(fn, "__name__", repr(fn))
+            if self.expect_total is not None:
+                if now != self.expect_total:
+                    raise AssertionError(
+                        f"compile sanitizer{tag}: {name} holds {now} jit "
+                        f"cache entries, expected exactly "
+                        f"{self.expect_total} — a traced axis leaked into "
+                        f"the compile key")
+            else:
+                grown = now - (start or 0)
+                if grown > self.max_new:
+                    raise AssertionError(
+                        f"compile sanitizer{tag}: {name} gained {grown} "
+                        f"jit cache entries (allowed {self.max_new}) — "
+                        f"the guarded region retraced")
+        return self
+
+    def __enter__(self) -> "CompileSanitizer":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        if exc_type is None:
+            self.check()
+
+
+def assert_no_new_compiles(*fns: Any, expect_total: Optional[int] = None,
+                           max_new: int = 0,
+                           label: str = "") -> CompileSanitizer:
+    """One entry point for both compile-counter idioms (see module doc).
+
+    With ``expect_total`` the check runs immediately; without it the
+    returned sanitizer snapshots now and checks on ``with``-exit (or an
+    explicit ``.check()``).
+    """
+    sanitizer = CompileSanitizer(*fns, expect_total=expect_total,
+                                 max_new=max_new, label=label)
+    if expect_total is not None:
+        sanitizer.check()
+    return sanitizer
+
+
+# ---------------------------------------------------------------------------
+# Donation
+# ---------------------------------------------------------------------------
+
+
+def donation_honored() -> bool:
+    """Whether this backend actually consumes donated buffers (CPU ignores
+    donation, so donated args stay live there by design)."""
+    return jax.default_backend() != "cpu"
+
+
+class DonationSanitizer:
+    """Asserts that operands handed to ``donate_argnums`` positions were
+    consumed by the call::
+
+        with DonationSanitizer(state, batch):
+            state2, out = run(state, batch)
+
+    On exit every array leaf of the wrapped operands must be deleted
+    (``x.is_deleted()``).  Skips silently where donation is ignored
+    (CPU) unless ``strict=True``.
+    """
+
+    def __init__(self, *donated: Any, strict: bool = False):
+        self.leaves = [x for x in jax.tree_util.tree_leaves(donated)
+                       if hasattr(x, "is_deleted")]
+        self.strict = strict
+
+    def live_leaves(self) -> Sequence[Any]:
+        return [x for x in self.leaves if not x.is_deleted()]
+
+    def assert_donated(self) -> None:
+        if not donation_honored() and not self.strict:
+            return
+        live = self.live_leaves()
+        if live:
+            shapes = [getattr(x, "shape", "?") for x in live[:4]]
+            raise AssertionError(
+                f"donation sanitizer: {len(live)}/{len(self.leaves)} "
+                f"donated leaves still live after the call (first shapes "
+                f"{shapes}) — donate_argnums did not consume them")
+
+    def __enter__(self) -> "DonationSanitizer":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        if exc_type is None:
+            self.assert_donated()

@@ -296,10 +296,6 @@ def _make_scale_round_fn(loss_fn, optimizer, algorithm, link, fed_cfg,
     C = cohort_size
 
     def round_fn(state: FedState, ds_state, k_data, source) -> tuple:
-        if source.sample_cohort is None:
-            raise ValueError(
-                f"cohort mode needs a DataSource with sample_cohort "
-                f"(source {source.name!r} has none)")
         key, k_link, k_cohort = jax.random.split(state.key, 3)
         # the link advances over the FULL population (Markov chains etc.
         # keep their dense-time semantics); the cohort sees its gather
@@ -371,7 +367,14 @@ def make_round_step(round_fn, source):
 
     if getattr(round_fn, "needs_source", False):
         # cohort engine: the round draws its own cohort and samples only
-        # that cohort's batches, so it needs the source inside
+        # that cohort's batches, so it needs the source inside; the source
+        # capability check belongs here, at build time, not in the traced
+        # round body
+        if source.sample_cohort is None:
+            raise ValueError(
+                f"cohort mode needs a DataSource with sample_cohort "
+                f"(source {source.name!r} has none)")
+
         def step(state: FedState, ds_state, data_key):
             k_data = jax.random.fold_in(data_key, state.round)
             return round_fn(state, ds_state, k_data, source)

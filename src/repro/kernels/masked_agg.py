@@ -152,6 +152,7 @@ def _fused_kernel(op_ref, mask_ref, p_ref, prev_ref, x_ref, o_ref):
 
 def _fused_call_2d(x, mask, op, prev, p, bn: int, interpret: bool):
     m, np_ = x.shape
+    assert np_ % bn == 0, (np_, bn)   # caller pads n up to a bn multiple
     return pl.pallas_call(
         _fused_kernel,
         grid=(np_ // bn,),
@@ -175,6 +176,7 @@ def _fused_batched_kernel(op_ref, mask_ref, p_ref, prev_ref, x_ref, o_ref):
 
 def _fused_call_3d(x, mask, op, prev, p, bn: int, interpret: bool):
     B, m, np_ = x.shape
+    assert np_ % bn == 0, (np_, bn)   # caller pads n up to a bn multiple
     return pl.pallas_call(
         _fused_batched_kernel,
         grid=(B, np_ // bn),

@@ -134,7 +134,7 @@ def test_family_batch_sharded_bit_for_bit():
     _assert_trees_equal(sharded, ref)
 
 
-def test_runner_cache_keyed_by_family_not_algorithm_name():
+def test_runner_cache_keyed_by_family_not_algorithm_name(compiles_once):
     """Cells differing only in a family-compatible algorithm share ONE
     runner object and ONE compiled (init, scan) pair."""
     spec = dataclasses.replace(BASE, rounds=4, eval_every=0)
@@ -149,14 +149,12 @@ def test_runner_cache_keyed_by_family_not_algorithm_name():
     # same compiled program served both (same batch shapes, different algo_id
     # values — a traced input, not a compile knob)
     runner = runners["fedpbc"]
-    if hasattr(runner.scan_batch, "_cache_size"):
-        assert runner.init_batch._cache_size() == 1
-        assert runner.scan_batch._cache_size() == 1
+    compiles_once(runner.init_batch, runner.scan_batch)
     # and the trajectories genuinely differ by algorithm
     assert not np.array_equal(a[0].test_acc, b[0].test_acc)
 
 
-def test_run_sweep_batches_family_into_one_program(tmp_path):
+def test_run_sweep_batches_family_into_one_program(tmp_path, compiles_once):
     """A FedPBC-vs-baselines sweep (the paper's core comparison) executes as
     ONE compiled program — the CI compile counter — while cells and store
     rows keep the scheme -> algorithm -> point order with the algo
@@ -172,10 +170,8 @@ def test_run_sweep_batches_family_into_one_program(tmp_path):
         (a, lr) for a in FAMILY for lr in spec.lrs]
     fed = spec.cell_config(FAMILY[0], "bernoulli_ti")
     runner = _runner_for(spec, fed, get_traced_task(spec), METRIC_KEYS)
-    if hasattr(runner.scan_batch, "_cache_size"):
-        # the whole 4-algorithm family reused ONE jit cache entry per stage
-        assert runner.init_batch._cache_size() == 1
-        assert runner.scan_batch._cache_size() == 1
+    # the whole 4-algorithm family reused ONE jit cache entry per stage
+    compiles_once(runner.init_batch, runner.scan_batch)
     rows = store.records(suite="algo-axis")
     assert [r["algo"] for r in rows] == [a for a in FAMILY for _ in range(P)]
     for row, cell in zip(rows, cells):

@@ -1,0 +1,607 @@
+"""tracelint + sanitizers: the trace-discipline gate gates itself.
+
+Acceptance pins:
+
+1. Every rule (R001-R006) has a fixture-proven TRUE POSITIVE and a
+   neighboring negative showing the exemption that keeps the real codebase
+   quiet (shape/dtype access, isinstance, `param is None`, static_argnames,
+   Callable dataclass fields, zeroed replace() keys, guarded grids).
+2. Suppressions: `# tracelint: disable=RXXX -- why` silences exactly that
+   rule on that line; a justification-less suppression is itself a finding
+   (R000).
+3. The baseline ratchets: grandfathered findings pass, NEW findings fail,
+   entries whose finding disappeared surface as stale, and a
+   justification-less baseline entry is rejected.
+4. Self-lint: `src/repro/analysis/` and this repo's committed baseline
+   leave the CLI at exit 0 (the CI gate's exact invocation).
+5. Runtime half: `assert_no_new_compiles` pins jit cache totals/deltas and
+   degrades to a no-op without introspection; `DonationSanitizer` reports
+   donation truthfully per backend.
+"""
+import json
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import baseline as baseline_lib
+from repro.analysis.lint import lint_paths, lint_text, main
+from repro.analysis.rules import RULES
+
+
+def codes(findings):
+    return [f.rule for f in findings]
+
+
+def lint_kernel(src: str, dispatch_src=None):
+    """Lint a snippet as if it lived in kernels/ (enables R006)."""
+    return lint_text(src, "src/repro/kernels/fake.py",
+                     dispatch_src=dispatch_src)
+
+
+# ---------------------------------------------------------------------------
+# R001 — python branching on traced values
+# ---------------------------------------------------------------------------
+
+
+def test_r001_branch_on_jit_param_positive():
+    src = (
+        "import jax\n"
+        "@jax.jit\n"
+        "def f(x):\n"
+        "    if x > 0:\n"
+        "        return x\n"
+        "    return -x\n")
+    found = lint_text(src, "m.py")
+    assert codes(found) == ["R001"]
+    assert found[0].line == 4
+
+
+def test_r001_scan_body_and_derived_values():
+    """Taint flows through assignments, and scan bodies are traced even
+    without a decorator (structural detection through lax.scan)."""
+    src = (
+        "import jax\n"
+        "def outer(xs):\n"
+        "    def body(carry, x):\n"
+        "        y = x * 2\n"
+        "        while y > 1:\n"
+        "            y = y - 1\n"
+        "        return carry, y\n"
+        "    return jax.lax.scan(body, 0, xs)\n")
+    assert codes(lint_text(src, "m.py")) == ["R001"]
+
+
+def test_r001_round_fn_convention():
+    """The executor's round bodies travel by closure — caught by name."""
+    src = (
+        "def round_fn(state, batch):\n"
+        "    assert state.round >= 0\n"
+        "    return state\n")
+    assert codes(lint_text(src, "m.py")) == ["R001"]
+
+
+def test_r001_negatives_shape_isinstance_is_none_static():
+    """The four exemptions that keep the real engine quiet: shape-derived
+    values, isinstance guards, `param is None`, and static_argnames."""
+    src = (
+        "import jax, functools\n"
+        "@functools.partial(jax.jit, static_argnames=('block',))\n"
+        "def f(x, prev=None, *, block=128):\n"
+        "    m, n = x.shape\n"
+        "    if n > 1:\n"
+        "        pass\n"
+        "    if isinstance(x, tuple):\n"
+        "        pass\n"
+        "    if prev is None:\n"
+        "        pass\n"
+        "    if block > 64:\n"
+        "        pass\n"
+        "    return x\n")
+    assert lint_text(src, "m.py") == []
+
+
+def test_r001_attribute_is_none_still_flagged():
+    """`param.attr is None` reaches into an argument's internals — that
+    check belongs at build time (the federated.py cohort fix)."""
+    src = (
+        "def round_fn(state, source):\n"
+        "    if source.sample_cohort is None:\n"
+        "        raise ValueError('no cohort sampler')\n"
+        "    return state\n")
+    assert codes(lint_text(src, "m.py")) == ["R001"]
+
+
+def test_r001_closure_of_untraced_factory_is_static():
+    """Reads of a non-traced factory's locals are compile constants."""
+    src = (
+        "import jax\n"
+        "def make(flag):\n"
+        "    def inner(x):\n"
+        "        if flag:\n"
+        "            return x * 2\n"
+        "        return x\n"
+        "    return jax.jit(inner)\n")
+    assert lint_text(src, "m.py") == []
+
+
+# ---------------------------------------------------------------------------
+# R002 — host syncs inside traced contexts
+# ---------------------------------------------------------------------------
+
+
+def test_r002_positives():
+    src = (
+        "import jax\n"
+        "import numpy as np\n"
+        "@jax.jit\n"
+        "def f(x):\n"
+        "    print('round', x)\n"
+        "    v = float(x)\n"
+        "    w = x.item()\n"
+        "    a = np.asarray(x)\n"
+        "    jax.device_get(x)\n"
+        "    x.block_until_ready()\n"
+        "    return v + w + a\n")
+    assert codes(lint_text(src, "m.py")) == ["R002"] * 6
+
+
+def test_r002_negatives_host_side_and_static():
+    """Host-side timing/CSV code (benchmarks/) is untraced; int(len(x))
+    and np.array of a constant table are static even inside jit."""
+    src = (
+        "import jax\n"
+        "import numpy as np\n"
+        "def bench(run, batch):\n"
+        "    out = run(batch)\n"
+        "    print('cells/sec', float(out))\n"
+        "    return np.asarray(out)\n"
+        "@jax.jit\n"
+        "def f(x):\n"
+        "    n = int(len(x))\n"
+        "    table = np.asarray([1, 2, 3])\n"
+        "    return x * n + table[0]\n")
+    assert lint_text(src, "m.py") == []
+
+
+# ---------------------------------------------------------------------------
+# R003 — structure-only runner-cache keys
+# ---------------------------------------------------------------------------
+
+
+def test_r003_hparam_attr_in_key_positive():
+    src = (
+        "_RUNNER_CACHE = {}\n"
+        "def runner_for(spec):\n"
+        "    key = (spec.task, spec.lr)\n"
+        "    if key not in _RUNNER_CACHE:\n"
+        "        _RUNNER_CACHE[key] = object()\n"
+        "    return _RUNNER_CACHE[key]\n")
+    found = lint_text(src, "m.py")
+    assert "R003" in codes(found)
+    assert any(".lr" in f.message for f in found)
+
+
+def test_r003_unzeroed_replace_positive():
+    """A replace() canonicalization that forgets one hparam knob."""
+    src = (
+        "import dataclasses\n"
+        "_RUNNER_CACHE = {}\n"
+        "def runner_for(spec, fed):\n"
+        "    canon = dataclasses.replace(fed, alpha=0.0, sigma0=0.0,\n"
+        "                                delta=0.0)\n"
+        "    key = (canon, spec.rounds)\n"
+        "    return _RUNNER_CACHE.setdefault(key, object())\n")
+    found = lint_text(src, "m.py")
+    assert codes(found) == ["R003"]
+    assert "gamma" in found[0].message
+
+
+def test_r003_zeroed_replace_negative():
+    """grid.py's actual contract: all knobs zeroed -> quiet."""
+    src = (
+        "import dataclasses\n"
+        "_RUNNER_CACHE = {}\n"
+        "def runner_for(spec, fed):\n"
+        "    canon = dataclasses.replace(fed, alpha=0.0, sigma0=0.0,\n"
+        "                                delta=0.0, gamma=0.0, period=0)\n"
+        "    key = (canon, spec.rounds, spec.eval_every)\n"
+        "    return _RUNNER_CACHE.setdefault(key, object())\n")
+    assert lint_text(src, "m.py") == []
+
+
+def test_r003_key_helper_expansion():
+    """hparams hidden inside a local *_key() helper are still caught."""
+    src = (
+        "_RUNNER_CACHE = {}\n"
+        "def _task_key(spec):\n"
+        "    return (spec.task, spec.gamma)\n"
+        "def runner_for(spec):\n"
+        "    key = _task_key(spec)\n"
+        "    return _RUNNER_CACHE.setdefault(key, object())\n")
+    found = lint_text(src, "m.py")
+    assert codes(found) == ["R003"]
+    assert "_task_key" in found[0].message
+
+
+# ---------------------------------------------------------------------------
+# R004 — pytree registration
+# ---------------------------------------------------------------------------
+
+R004_POS = (
+    "from dataclasses import dataclass\n"
+    "import jax.numpy as jnp\n"
+    "@dataclass\n"
+    "class State:\n"
+    "    params: jnp.ndarray\n"
+    "    count: int\n")
+
+
+def test_r004_unregistered_dataclass_positive():
+    found = lint_text(R004_POS, "m.py")
+    assert codes(found) == ["R004"]
+    assert "params" in found[0].message
+
+
+def test_r004_registered_dataclass_negative():
+    src = R004_POS + (
+        "import jax\n"
+        "jax.tree_util.register_dataclass(State, data_fields=['params'],\n"
+        "                                 meta_fields=['count'])\n")
+    assert lint_text(src, "m.py") == []
+
+
+def test_r004_callable_and_host_fields_negative():
+    """Callables are behavior, not data; np.ndarray / float fields live on
+    the host and never cross jit as pytrees."""
+    src = (
+        "from dataclasses import dataclass\n"
+        "from typing import Callable\n"
+        "import numpy as np\n"
+        "@dataclass\n"
+        "class Task:\n"
+        "    loss_fn: Callable[..., 'Pytree']\n"
+        "    partition: np.ndarray\n"
+        "    lr: float\n")
+    assert lint_text(src, "m.py") == []
+
+
+# ---------------------------------------------------------------------------
+# R005 — donated-buffer reuse
+# ---------------------------------------------------------------------------
+
+
+def test_r005_reuse_after_donation_positive():
+    src = (
+        "import jax\n"
+        "def caller(state, batch):\n"
+        "    g = jax.jit(lambda s, b: s, donate_argnums=(0,))\n"
+        "    out = g(state, batch)\n"
+        "    return state.round\n")
+    found = lint_text(src, "m.py")
+    assert codes(found) == ["R005"]
+    assert "'state'" in found[0].message
+
+
+def test_r005_rebind_is_fine():
+    """The supported idiom: rebind the donated name from the call."""
+    src = (
+        "import jax\n"
+        "def caller(state, batch):\n"
+        "    g = jax.jit(lambda s, b: s, donate_argnums=(0,))\n"
+        "    state = g(state, batch)\n"
+        "    return state.round\n")
+    assert lint_text(src, "m.py") == []
+
+
+# ---------------------------------------------------------------------------
+# R006 — pallas kernel hygiene (kernels/ scoped)
+# ---------------------------------------------------------------------------
+
+
+def test_r006_missing_divisibility_guard_positive():
+    src = (
+        "import jax\n"
+        "from jax.experimental import pallas as pl\n"
+        "def call(x, bn):\n"
+        "    m, n = x.shape\n"
+        "    return pl.pallas_call(kern, grid=(n // bn,))(x)\n"
+        "def kern(x_ref, o_ref):\n"
+        "    o_ref[...] = x_ref[...]\n")
+    found = lint_kernel(src)
+    assert "R006" in codes(found)
+    assert "'bn'" in found[0].message
+
+
+def test_r006_guarded_grid_negative():
+    """Either an assert-% or a padding expression satisfies the guard."""
+    asserted = (
+        "from jax.experimental import pallas as pl\n"
+        "def call(x, bn):\n"
+        "    m, n = x.shape\n"
+        "    assert n % bn == 0, (n, bn)\n"
+        "    return pl.pallas_call(kern, grid=(n // bn,))(x)\n"
+        "def kern(x_ref, o_ref):\n"
+        "    o_ref[...] = x_ref[...]\n")
+    padded = (
+        "import jax.numpy as jnp\n"
+        "from jax.experimental import pallas as pl\n"
+        "def call(x, bn):\n"
+        "    m, n = x.shape\n"
+        "    pad = (-n) % bn\n"
+        "    x = jnp.pad(x, ((0, 0), (0, pad)))\n"
+        "    return pl.pallas_call(kern, grid=(x.shape[1] // bn,))(x)\n"
+        "def kern(x_ref, o_ref):\n"
+        "    o_ref[...] = x_ref[...]\n")
+    assert lint_kernel(asserted) == []
+    assert lint_kernel(padded) == []
+
+
+def test_r006_branch_on_ref_shape_and_missing_fp32():
+    src = (
+        "from jax.experimental import pallas as pl\n"
+        "def call(x):\n"
+        "    return pl.pallas_call(kern, grid=(1,))(x)\n"
+        "def kern(x_ref, o_ref):\n"
+        "    if x_ref.shape[0] > 1:\n"
+        "        o_ref[...] = x_ref[...].sum(0)\n")
+    found = lint_kernel(src)
+    assert codes(found) == ["R006", "R006"]
+    msgs = " | ".join(f.message for f in found)
+    assert "ref shape" in msgs and "fp32" in msgs
+
+
+def test_r006_fp32_accumulation_negative():
+    src = (
+        "import jax.numpy as jnp\n"
+        "from jax.experimental import pallas as pl\n"
+        "def call(x):\n"
+        "    return pl.pallas_call(kern, grid=(1,))(x)\n"
+        "def kern(x_ref, o_ref):\n"
+        "    o_ref[...] = x_ref[...].astype(jnp.float32).sum(0)\n")
+    assert lint_kernel(src) == []
+
+
+def test_r006_dispatch_routing():
+    kernel_src = (
+        "from jax.experimental import pallas as pl\n"
+        "def call(x):\n"
+        "    return pl.pallas_call(kern, grid=(1,))(x)\n"
+        "def kern(x_ref, o_ref):\n"
+        "    o_ref[...] = x_ref[...]\n")
+    routed = lint_kernel(kernel_src, dispatch_src="from fake import call\n")
+    unrouted = lint_kernel(kernel_src, dispatch_src="# nothing here\n")
+    assert routed == []
+    assert codes(unrouted) == ["R006"]
+    assert "not routed" in unrouted[0].message
+
+
+def test_r006_only_applies_under_kernels_dir():
+    src = (
+        "from jax.experimental import pallas as pl\n"
+        "def call(x, bn):\n"
+        "    m, n = x.shape\n"
+        "    return pl.pallas_call(kern, grid=(n // bn,))(x)\n"
+        "def kern(x_ref, o_ref):\n"
+        "    o_ref[...] = x_ref[...]\n")
+    assert lint_text(src, "src/repro/models/fake.py") == []
+
+
+# ---------------------------------------------------------------------------
+# Suppressions (and R000)
+# ---------------------------------------------------------------------------
+
+SUPPRESSIBLE = (
+    "import jax\n"
+    "@jax.jit\n"
+    "def f(x):\n"
+    "    if x > 0:{comment}\n"
+    "        return x\n"
+    "    return -x\n")
+
+
+def test_suppression_with_justification_silences():
+    src = SUPPRESSIBLE.format(
+        comment="  # tracelint: disable=R001 -- fixture: known-static")
+    assert lint_text(src, "m.py") == []
+
+
+def test_suppression_wrong_code_does_not_silence():
+    src = SUPPRESSIBLE.format(
+        comment="  # tracelint: disable=R002 -- wrong rule")
+    assert codes(lint_text(src, "m.py")) == ["R001"]
+
+
+def test_suppression_without_justification_is_r000():
+    src = SUPPRESSIBLE.format(comment="  # tracelint: disable=R001")
+    found = lint_text(src, "m.py")
+    assert codes(found) == ["R000"]
+
+
+# ---------------------------------------------------------------------------
+# Baseline ratchet
+# ---------------------------------------------------------------------------
+
+DIRTY = (
+    "import jax\n"
+    "@jax.jit\n"
+    "def f(x):\n"
+    "    if x > 0:\n"
+    "        return x\n"
+    "    return -x\n")
+
+
+def _write_tree(tmp_path, name="mod.py", src=DIRTY):
+    pkg = tmp_path / "pkg"
+    pkg.mkdir(exist_ok=True)
+    (pkg / name).write_text(src)
+    return pkg
+
+
+def test_baseline_grandfathers_then_ratchets(tmp_path, capsys):
+    pkg = _write_tree(tmp_path)
+    base = tmp_path / "base.json"
+    findings = lint_paths([str(pkg)])
+    assert codes(findings) == ["R001"]
+
+    baseline_lib.save(base, findings)
+    assert main([str(pkg), "--baseline", str(base)]) == 0
+
+    # a NEW finding (another dirty function) fails the gate
+    (pkg / "mod2.py").write_text(DIRTY)
+    assert main([str(pkg), "--baseline", str(base)]) == 1
+    capsys.readouterr()
+    assert main([str(pkg), "--baseline", str(base), "--json"]) == 1
+    payload = json.loads(capsys.readouterr().out)
+    assert payload["grandfathered"] == 1
+    assert len(payload["findings"]) == 1
+    assert payload["findings"][0]["file"].endswith("mod2.py")
+
+
+def test_baseline_stale_entry_surfaces_but_passes(tmp_path, capsys):
+    pkg = _write_tree(tmp_path)
+    base = tmp_path / "base.json"
+    baseline_lib.save(base, lint_paths([str(pkg)]))
+    (pkg / "mod.py").write_text("x = 1\n")       # finding fixed
+    assert main([str(pkg), "--baseline", str(base)]) == 0
+    assert "stale baseline entry" in capsys.readouterr().err
+
+
+def test_baseline_fingerprint_survives_line_drift(tmp_path):
+    pkg = _write_tree(tmp_path)
+    base = tmp_path / "base.json"
+    baseline_lib.save(base, lint_paths([str(pkg)]))
+    # 40 lines of prelude shift every lineno; the fingerprint holds
+    (pkg / "mod.py").write_text("# pad\n" * 40 + DIRTY)
+    assert main([str(pkg), "--baseline", str(base)]) == 0
+
+
+def test_baseline_requires_justification(tmp_path):
+    base = tmp_path / "base.json"
+    base.write_text(json.dumps({"version": 1, "entries": [
+        {"fingerprint": "abc", "file": "m.py", "line": 1, "rule": "R001",
+         "message": "x", "justification": ""}]}))
+    with pytest.raises(ValueError, match="justification"):
+        baseline_lib.load(base)
+
+
+def test_update_baseline_keeps_existing_justifications(tmp_path):
+    pkg = _write_tree(tmp_path)
+    base = tmp_path / "base.json"
+    assert main([str(pkg), "--baseline", str(base),
+                 "--update-baseline"]) == 0
+    data = json.loads(base.read_text())
+    data["entries"][0]["justification"] = "KEEP ME"
+    base.write_text(json.dumps(data))
+    assert main([str(pkg), "--baseline", str(base),
+                 "--update-baseline"]) == 0
+    data2 = json.loads(base.read_text())
+    assert data2["entries"][0]["justification"] == "KEEP ME"
+
+
+# ---------------------------------------------------------------------------
+# Self-lint: the gate holds on this repo
+# ---------------------------------------------------------------------------
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def test_self_lint_analysis_package_clean():
+    findings = lint_paths([str(REPO / "src" / "repro" / "analysis")])
+    assert findings == [], [f.render() for f in findings]
+
+
+def test_repo_gate_exits_zero_against_committed_baseline():
+    """The CI invocation, byte for byte (modulo cwd)."""
+    baseline = REPO / ".tracelint-baseline.json"
+    assert baseline.exists()
+    entries = baseline_lib.load(baseline)
+    assert all(e["justification"].strip() for e in entries.values())
+    findings = lint_paths([str(REPO / "src"), str(REPO / "benchmarks")])
+    # paths in the committed baseline are repo-relative; re-key on the
+    # fingerprint's (file-tail, rule, text) by rebasing to repo-relative
+    rel = [type(f)(file=str(Path(f.file).relative_to(REPO)), line=f.line,
+                   rule=f.rule, message=f.message, line_text=f.line_text)
+           for f in findings]
+    new, grandfathered, _ = baseline_lib.partition(rel, entries)
+    assert new == [], [f.render() for f in new]
+    assert len(grandfathered) == len(entries)
+
+
+def test_every_rule_documented():
+    assert set(RULES) == {"R000", "R001", "R002", "R003", "R004", "R005",
+                          "R006"}
+    for rule in RULES.values():
+        assert rule.summary and rule.name
+
+
+# ---------------------------------------------------------------------------
+# Runtime half: compile + donation sanitizers
+# ---------------------------------------------------------------------------
+
+
+def test_compile_sanitizer_pins_totals_and_deltas():
+    import jax
+    import jax.numpy as jnp
+    from repro.analysis.sanitize import assert_no_new_compiles
+
+    @jax.jit
+    def f(x):
+        return x * 2
+
+    f(jnp.ones((2,)))
+    probe = assert_no_new_compiles(f, expect_total=1)
+    if not probe.has_introspection:
+        pytest.skip("jit cache introspection unavailable")
+
+    with assert_no_new_compiles(f):
+        f(jnp.ones((2,)) * 3)        # same aval: no retrace
+
+    f(jnp.ones((3,)))                # new shape: second entry
+    with pytest.raises(AssertionError, match="expected exactly 1"):
+        assert_no_new_compiles(f, expect_total=1)
+    assert_no_new_compiles(f, expect_total=2)
+
+    with pytest.raises(AssertionError, match="retraced"):
+        with assert_no_new_compiles(f):
+            f(jnp.ones((4,)))
+
+    # allowed growth budget
+    with assert_no_new_compiles(f, max_new=1):
+        f(jnp.ones((5,)))
+
+
+def test_compile_sanitizer_noop_without_introspection():
+    from repro.analysis.sanitize import assert_no_new_compiles
+
+    def plain(x):
+        return x
+
+    probe = assert_no_new_compiles(plain, expect_total=1)   # must not raise
+    assert not probe.has_introspection
+    with assert_no_new_compiles(plain):
+        plain(1)
+
+
+def test_donation_sanitizer_consumed_and_not_consumed():
+    import jax
+    import jax.numpy as jnp
+    from repro.analysis.sanitize import DonationSanitizer
+
+    # donated operand: jax invalidates the argument array (even where the
+    # backend doesn't reuse the buffer, the array is marked deleted)
+    run = jax.jit(lambda s: s + 1, donate_argnums=(0,))
+    state = jnp.ones((8,))
+    with DonationSanitizer(state, strict=True) as d:
+        out = run(state)
+    out.block_until_ready()
+    assert not d.live_leaves()
+
+    # un-donated operand stays live: strict mode reports it, non-strict
+    # skips on backends that ignore donation (CPU)
+    plain = jax.jit(lambda s: s + 1)
+    state2 = jnp.ones((8,))
+    d2 = DonationSanitizer(state2, strict=True)
+    plain(state2).block_until_ready()
+    assert d2.live_leaves()
+    with pytest.raises(AssertionError, match="still live"):
+        d2.assert_donated()

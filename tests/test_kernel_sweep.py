@@ -156,7 +156,7 @@ def test_sweep_use_kernel_sharded_bit_for_bit():
     _assert_trees_equal(got, run_sharded(r_xla, batch, mesh))
 
 
-def test_use_kernel_zero_extra_jit_entries(tmp_path):
+def test_use_kernel_zero_extra_jit_entries(tmp_path, compiles_once):
     """The CI compile counter: a full 4-algorithm family run_sweep with
     use_kernel=True compiles exactly ONE (init, scan) jit entry — the fused
     program batches the whole family, adding zero entries over the XLA
@@ -168,9 +168,7 @@ def test_use_kernel_zero_extra_jit_entries(tmp_path):
         (a, lr) for a in FAMILY for lr in spec.lrs]
     fed = spec.cell_config(FAMILY[0], "bernoulli_ti")
     runner = _runner_for(spec, fed, get_traced_task(spec), METRIC_KEYS)
-    if hasattr(runner.scan_batch, "_cache_size"):
-        assert runner.init_batch._cache_size() == 1
-        assert runner.scan_batch._cache_size() == 1
+    compiles_once(runner.init_batch, runner.scan_batch)
     # the kernel path is live, not decorative: distinct algorithms diverge
     finals = {c.algo: c.test_acc.tobytes() for c in cells
               if c.hparams["lr"] == spec.lrs[0]}

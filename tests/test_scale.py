@@ -167,7 +167,8 @@ def test_buffered_strategy_refused_for_stateful_rules():
 # 4. the strategy axis is one compiled program
 # ---------------------------------------------------------------------------
 
-def test_buffered_sweep_compiles_one_program_and_records_strategy(tmp_path):
+def test_buffered_sweep_compiles_one_program_and_records_strategy(
+        tmp_path, compiles_once):
     spec = dataclasses.replace(BASE, strategies=(SYNC, BUFFERED),
                                schemes=("bernoulli_ti",))
     store = ResultsStore(str(tmp_path / "sweeps"))
@@ -176,11 +177,9 @@ def test_buffered_sweep_compiles_one_program_and_records_strategy(tmp_path):
     assert [c.strategy for c in cells] == ["sync", "buffered"]
     fed = spec.cell_config("fedpbc", "bernoulli_ti")
     runner = _runner_for(spec, fed, get_traced_task(spec), METRIC_KEYS)
-    if hasattr(runner.scan_batch, "_cache_size"):
-        # both strategies (and any knob grid) share ONE (init, scan) pair —
-        # the knobs are traced per-trajectory columns, not compile constants
-        assert runner.init_batch._cache_size() == 1
-        assert runner.scan_batch._cache_size() == 1
+    # both strategies (and any knob grid) share ONE (init, scan) pair —
+    # the knobs are traced per-trajectory columns, not compile constants
+    compiles_once(runner.init_batch, runner.scan_batch)
     rows = store.records(suite="scale")
     assert [r["strategy"] for r in rows] == ["sync", "buffered"]
     # buffered rows carry the commit trace; its cadence is a real policy
