@@ -17,7 +17,8 @@ SUITE_INFO = {
     "fig2": ("Eq.-3 FedAvg bias series vs simulation", ()),
     "fig3": ("quadratic counterexample convergence curves", ()),
     "table1": ("final test accuracy grid (algorithms x schemes)", ()),
-    "table2": ("rounds-to-target-accuracy grid", ()),
+    "table2": ("rounds-to-target-accuracy grid (writes the machine-readable "
+               "baseline JSON benchmarks/asha.py consumes)", ()),
     "fig8": ("alpha/gamma/delta/sigma0 ablations on one traced axis", ()),
     "extensions": ("beyond-paper extensions (fedpbc_m momentum)", ()),
     "throughput": ("scanned round engine vs per-round dispatch", ()),
@@ -34,6 +35,8 @@ SUITE_INFO = {
     "lm_sweep": ("federated LM family sweep on the 2-D (batch, model) mesh "
                  "vs one device, roofline-gated",
                  ("lm_family", "cohort")),
+    "asha": ("successive-halving search vs exhaustive grid (time-to-target "
+             "on the resumable segment runner)", ("asha_vs_grid",)),
 }
 
 
@@ -57,6 +60,7 @@ def main() -> None:
         return
 
     from benchmarks import (
+        asha,
         extensions,
         fig2_bias,
         fig3_quadratic,
@@ -84,6 +88,7 @@ def main() -> None:
         "kernels": lambda: kernels_bench.run(),
         "scale": lambda: scale.run(rounds=max(args.rounds // 8, 20)),
         "lm_sweep": lambda: lm_sweep.run(rounds=max(args.rounds // 25, 4)),
+        "asha": lambda: asha.run(rounds=max(args.rounds // 4, 32)),
     }
     assert set(suites) == set(SUITE_INFO)
     if args.only:

@@ -6,17 +6,30 @@ eval cadence (``evals [S, E]`` at ``eval_rounds`` boundaries), so the whole
 7-algorithm column runs as 7 compiled programs total — no per-eval host
 round-trips. Like table 1 it occupies a single point on the engine's
 hyperparameter axis; its compiled programs are shared with any lr/alpha
-ablation of the same protocol."""
+ablation of the same protocol.
+
+Besides the CSV view, ``run`` emits a machine-readable rounds-to-target
+baseline — a ``BENCH {...}`` JSON line, also written to ``out_path``
+(default ``benchmarks/out/table2_rounds_to_target.json``) — with the
+absolute accuracy targets and the first round each algorithm reached them.
+``benchmarks/asha.py`` consumes this file as the exhaustive-search baseline
+its adaptive-search time-to-target claim is measured against.
+"""
 from __future__ import annotations
 
-import numpy as np
+import json
+import os
 
 from repro.experiments import SweepSpec, run_sweep
 
 from benchmarks.common import ALGOS
 
+OUT_PATH = os.path.join(os.path.dirname(__file__), "out",
+                        "table2_rounds_to_target.json")
 
-def run(csv=True, *, rounds=300, m=100, algos=ALGOS, seed=0, store=None):
+
+def run(csv=True, *, rounds=300, m=100, algos=ALGOS, seed=0, store=None,
+        out_path=OUT_PATH):
     spec = SweepSpec(algorithms=tuple(algos), schemes=("bernoulli_tv",),
                      seeds=(seed,), rounds=rounds,
                      eval_every=min(10, rounds), num_clients=m)
@@ -24,20 +37,41 @@ def run(csv=True, *, rounds=300, m=100, algos=ALGOS, seed=0, store=None):
     trajs = {c.algo: list(zip(c.eval_rounds, c.test_acc.mean(axis=0)))
              for c in cells}
     best = max(a for tr in trajs.values() for _, a in tr)
-    targets = [best * f for f in (0.25, 0.5, 0.75, 1.0)]
+    fractions = (0.25, 0.5, 0.75, 1.0)
+    targets = [best * f for f in fractions]
     if csv:
         print("table2,algo,q25_round,q50_round,q75_round,q100_round,best_acc")
-    out = {}
+    firsts_by_algo = {}
     for algo, tr in trajs.items():
         firsts = []
         for tgt in targets:
             hit = next((r for r, a in tr if a >= tgt - 1e-9), None)
-            firsts.append(hit if hit is not None else -1)
-        out[algo] = firsts
+            firsts.append(int(hit) if hit is not None else -1)
+        firsts_by_algo[algo] = firsts
         if csv:
             print(f"table2,{algo},{firsts[0]},{firsts[1]},{firsts[2]},"
                   f"{firsts[3]},{best:.4f}", flush=True)
-    return out
+    result = {
+        "bench": "table2_rounds_to_target",
+        "m": m,
+        "rounds": rounds,
+        "seeds": [seed],
+        "scheme": "bernoulli_tv",
+        "eval_every": min(10, rounds),
+        "algos": list(algos),
+        "best_acc": float(best),
+        "fractions": list(fractions),
+        "targets": [float(t) for t in targets],
+        # first eval round at which each algorithm's seed-mean trajectory
+        # reached each target (-1: never within the budget)
+        "rounds_to_target": firsts_by_algo,
+    }
+    print("BENCH " + json.dumps(result), flush=True)
+    if out_path:
+        os.makedirs(os.path.dirname(out_path), exist_ok=True)
+        with open(out_path, "w") as f:
+            json.dump(result, f, indent=2, sort_keys=True)
+    return result
 
 
 if __name__ == "__main__":

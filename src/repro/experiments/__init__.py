@@ -13,6 +13,11 @@
   (algo x point x seed) batch axis sharded over a ``("batch",)`` mesh,
   ``shared`` replicated, B padded to a device multiple (padding dropped on
   the host).
+- ``search``  — ``run_search``: successive-halving (ASHA-style) adaptive
+  hyperparameter search over the sweep engine — rung-sized scan segments on
+  the resumable ``carry_out`` runner, elastic re-batching of survivors into
+  full ``CellBatch``es (zero new jit entries), host-side pruning overlapped
+  with device compute; plus the search CLI.
 - ``results`` — append-only JSONL/npz results store with mean/CI summaries,
   cross-store ``merge`` + CLI.
 - ``plots``   — figure-style curve CSV exports straight from a store.
@@ -29,6 +34,12 @@ from repro.experiments.grid import (
     run_sweep,
 )
 from repro.experiments.results import ResultsStore, git_sha, summarize
+from repro.experiments.search import (
+    SearchOutcome,
+    SearchSpec,
+    run_search,
+    sample_point,
+)
 from repro.experiments.shard import (
     pad_batch,
     resolve_batch_mesh,
@@ -66,6 +77,10 @@ __all__ = [
     "ResultsStore",
     "git_sha",
     "summarize",
+    "SearchOutcome",
+    "SearchSpec",
+    "run_search",
+    "sample_point",
     "pad_batch",
     "resolve_batch_mesh",
     "run_sharded",

@@ -451,6 +451,52 @@ def _runner_for(spec: SweepSpec, fed: FederationConfig, task,
     return _RUNNER_CACHE[key]
 
 
+def segment_runner_for(spec: SweepSpec, algo: str, scheme: str, *,
+                       segment_rounds: int,
+                       metric_keys=("loss", "num_active")) -> Any:
+    """The adaptive-search controller's entry point into the runner cache
+    (``repro.experiments.search``): a resumable ``carry_out`` runner that
+    scans exactly ``segment_rounds`` rounds per dispatch, with
+    ``eval_every == segment_rounds`` so each segment fires exactly one
+    in-scan eval at its last round (the controller's prune signal).
+
+    Cache discipline matches ``_runner_for``: the key is *structure-only*
+    (task shape, zeroed-canonical fed config, segment length, metric keys,
+    kernel/scale modes), so every candidate the controller ever packs —
+    unseen lr/gamma values, re-batched survivor subsets, refilled fresh
+    points — rides ONE compiled (init, scan) pair per (family, scheme);
+    only the segment length itself is a new program. Shares
+    ``_RUNNER_CACHE`` with the one-shot runners under a ``"segment"`` tag,
+    and all task/partition/batch caches downstream."""
+    task = get_traced_task(spec)
+    fed = spec.cell_config(algo, scheme)
+    family = algo_family(fed.algorithm)
+    canon = dataclasses.replace(fed, alpha=0.0, sigma0=0.0, delta=0.0,
+                                gamma=0.0, period=0, algorithm=family[0])
+    use_kernel = resolve_use_kernel(spec.use_kernel)
+    buffered = _has_strategy_axis(spec)
+    key = ("segment", _task_key(spec), canon, segment_rounds,
+           tuple(metric_keys), use_kernel, spec.cohort_size, buffered)
+    if key not in _RUNNER_CACHE:
+        algo_spec = make_algorithm_spec(family, fed)
+        _RUNNER_CACHE[key] = make_batched_run_rounds(
+            task.loss_fn, algo_spec, fed,
+            optimizer_factory=lambda hp: sgd(paper_decay(hp["lr"])),
+            link_factory=lambda p, hp: make_link_process(
+                p, fed, gamma=hp["gamma"], period=hp["period"]),
+            source_factory=task.source_factory,
+            init_params=task.init_params,
+            num_rounds=segment_rounds,
+            eval_every=segment_rounds,
+            eval_fn=task.eval_test,
+            metric_keys=metric_keys,
+            use_kernel=use_kernel,
+            cohort_size=spec.cohort_size,
+            buffered=buffered,
+            carry_out=True)
+    return _RUNNER_CACHE[key]
+
+
 def point_base_probs(spec: SweepSpec, point: Dict[str, float]) -> jnp.ndarray:
     """Per-seed Eq.-9 connection-probability draws for one hyperparameter
     point, stacked to [S, m]. The per-seed key protocol (PRNGKey(seed)) is the

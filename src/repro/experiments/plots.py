@@ -37,8 +37,8 @@ def _curve_key(record: Dict[str, Any]) -> tuple:
     different seed batches pool along the seed axis while every
     protocol-distinguishing field still separates curves."""
     (suite, algo, scheme, strategy, _seeds, rounds, ee, hp,
-     proto) = cell_key(record)
-    return (suite, algo, scheme, strategy, rounds, ee, hp, proto)
+     proto, search) = cell_key(record)
+    return (suite, algo, scheme, strategy, rounds, ee, hp, proto, search)
 
 
 def _slug(key: tuple) -> str:
@@ -48,7 +48,7 @@ def _slug(key: tuple) -> str:
     the eye), and the EXACT hparam + protocol values are folded into a short
     digest suffix so curves differing only beyond display precision (e.g.
     logspace-generated lrs) still get distinct files."""
-    suite, algo, scheme, strategy, rounds, ee, hp, proto = key
+    suite, algo, scheme, strategy, rounds, ee, hp, proto, search = key
     parts = [str(suite), str(algo), str(scheme)]
     # synchronous cells keep their historical filenames; buffered-strategy
     # curves get the strategy name as one more distinguishing part
@@ -56,27 +56,38 @@ def _slug(key: tuple) -> str:
         parts.append(str(strategy))
     parts += [f"r{rounds}", f"e{ee}"]
     parts += [f"{k}{v:g}" for k, v in hp]
-    if hp or proto:
-        parts.append(
-            "p" + hashlib.md5(repr((hp, proto)).encode()).hexdigest()[:6])
+    # adaptive-search budget coordinate; non-search curves (search == ())
+    # keep their historical filenames and digests
+    for k, v in search:
+        parts.append(f"{'rung' if k == 'rung' else 'b'}{v:g}")
+    if hp or proto or search:
+        parts.append("p" + hashlib.md5(
+            repr((hp, proto, search) if search
+                 else (hp, proto)).encode()).hexdigest()[:6])
     return "-".join(p.replace("/", "_").replace(" ", "") for p in parts)
 
 
 def _summarize_rows(a: np.ndarray):
-    """[S, T] -> (mean [T], std [T], ci95 [T]) over the seed axis."""
-    s = a.shape[0]
-    mean = a.mean(axis=0)
-    std = a.std(axis=0, ddof=1) if s > 1 else np.zeros_like(mean)
-    ci95 = 1.96 * std / math.sqrt(s) if s > 1 else np.zeros_like(mean)
-    return mean, std, ci95
+    """[S, T] -> (mean [T], std [T], ci95 [T], n [T]) over the seed axis,
+    NaN-aware: pooled rows of different lengths are NaN-padded, so every
+    per-round statistic is computed over the seeds that actually reached
+    that round (``n`` is the per-round finite count)."""
+    valid = ~np.isnan(a)
+    n = valid.sum(axis=0)
+    mean = np.where(n > 0, np.nansum(a, axis=0) / np.maximum(n, 1), np.nan)
+    d = np.where(valid, a - mean, 0.0)
+    var = np.where(n > 1, (d ** 2).sum(axis=0) / np.maximum(n - 1, 1), 0.0)
+    std = np.sqrt(var)
+    ci95 = np.where(n > 1, 1.96 * std / np.sqrt(np.maximum(n, 1)), 0.0)
+    return mean, std, ci95, n
 
 
 def _write_curve(path: str, xs, a: np.ndarray) -> str:
-    mean, std, ci95 = _summarize_rows(a)
+    mean, std, ci95, n = _summarize_rows(a)
     with open(path, "w") as f:
         f.write("round,mean,std,ci95,n_seeds\n")
-        for x, m, sd, ci in zip(xs, mean, std, ci95):
-            f.write(f"{int(x)},{m:.6f},{sd:.6f},{ci:.6f},{a.shape[0]}\n")
+        for x, m, sd, ci, k in zip(xs, mean, std, ci95, n):
+            f.write(f"{int(x)},{m:.6f},{sd:.6f},{ci:.6f},{int(k)}\n")
     return path
 
 
@@ -86,7 +97,9 @@ def _pool_seed_rows(recs, payloads, name) -> "np.ndarray | None":
     session re-ran a superset batch), the later record's row wins — simple
     concatenation would double-count the shared seeds and understate the CI.
     Records without a usable ``seeds`` list contribute all rows under
-    synthetic never-colliding ids."""
+    synthetic never-colliding ids. Rows of different lengths (truncated
+    early-pruned trajectories pooled with full ones) are right-padded with
+    NaN to the longest row; the summaries mask the padding out."""
     rows: Dict[Any, np.ndarray] = {}
     for i, (rec, p) in enumerate(zip(recs, payloads)):
         arr = p.get(name)
@@ -97,7 +110,13 @@ def _pool_seed_rows(recs, payloads, name) -> "np.ndarray | None":
             seeds = [("anon", i, j) for j in range(arr.shape[0])]
         for s, row in zip(seeds, arr):
             rows[_hashable_seed(s)] = row
-    return np.stack(list(rows.values())) if rows else None
+    if not rows:
+        return None
+    width = max(r.shape[0] for r in rows.values())
+    return np.stack([
+        np.pad(r.astype(np.float64), (0, width - r.shape[0]),
+               constant_values=np.nan) if r.shape[0] < width else r
+        for r in rows.values()])
 
 
 def _hashable_seed(s):
@@ -156,8 +175,15 @@ def export_curves(store: ResultsStore, out_dir: str,
         slug = _slug(key)
         acc = _pool_seed_rows(recs, payloads, "test_acc")
         if acc is not None:
-            rounds_at = recs[0].get(
-                "eval_rounds", list(range(1, acc.shape[1] + 1)))
+            # pooled width = the LONGEST record's trajectory; take the eval
+            # axis from whichever record spans it (truncated rows are
+            # NaN-padded up to it)
+            rounds_at = max(
+                (r.get("eval_rounds") for r in recs
+                 if isinstance(r.get("eval_rounds"), list)),
+                key=len, default=None)
+            if rounds_at is None or len(rounds_at) != acc.shape[1]:
+                rounds_at = list(range(1, acc.shape[1] + 1))
             written.append(_write_curve(
                 os.path.join(out_dir, f"{slug}_acc.csv"), rounds_at, acc))
         loss = _pool_seed_rows(recs, payloads, "loss")

@@ -47,8 +47,14 @@ def git_sha(cwd: Optional[str] = None) -> str:
 
 
 def summarize(values, confidence: str = "ci95") -> Dict[str, float]:
-    """Mean / std / normal-approx 95% CI half-width over a 1-D seed axis."""
+    """Mean / std / normal-approx 95% CI half-width over a 1-D seed axis.
+
+    NaN entries are dropped before summarizing (``n`` counts the finite
+    values): variable-length trajectories — e.g. early-pruned search
+    candidates pooled with full-budget ones — are NaN-padded to a common
+    width, and the padding must not poison the statistics."""
     v = np.asarray(values, np.float64).ravel()
+    v = v[~np.isnan(v)]
     n = int(v.size)
     mean = float(v.mean()) if n else float("nan")
     std = float(v.std(ddof=1)) if n > 1 else 0.0
@@ -98,6 +104,11 @@ def cell_key(record: Dict[str, Any]) -> tuple:
     ``ResultsStore.merge``.
     """
     spec = record.get("spec") or {}
+    # adaptive-search rows carry a budget coordinate: a candidate pruned at
+    # rung 1 and the same point run to the full budget measure different
+    # things, so the (rung, budget_rounds) pair joins the identity. Records
+    # without a "search" dict normalize to () — legacy keys are unchanged.
+    search = record.get("search") or {}
     hp = record.get("hparams")
     if hp is None:
         # legacy (pre-hyperparameter-axis) records: the swept value lives
@@ -113,7 +124,9 @@ def cell_key(record: Dict[str, Any]) -> tuple:
             record.get("eval_every"),
             tuple(sorted((k, _hashable(v)) for k, v in hp.items())),
             tuple((f, _hashable(spec.get(f))) for f in _PROTOCOL_FIELDS
-                  if f in spec))
+                  if f in spec),
+            tuple((k, _hashable(search.get(k)))
+                  for k in ("rung", "budget_rounds") if k in search))
 
 
 def _jsonable(x):

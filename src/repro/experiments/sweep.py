@@ -136,7 +136,9 @@ def make_batched_run_rounds(loss_fn: Callable, algorithm,
                             use_kernel: bool = False,
                             cohort_size: Optional[int] = None,
                             buffered: bool = False,
-                            shard_mesh=None):
+                            shard_mesh=None,
+                            carry_out: bool = False,
+                            donate_carry: Optional[bool] = None):
     """Build the jitted B-trajectory runner for one grid cell.
 
     Args:
@@ -207,6 +209,24 @@ def make_batched_run_rounds(loss_fn: Callable, algorithm,
         gathered to model-replicated so downstream host-side evals see
         plain batch-sharded arrays. Feed the result through
         ``repro.experiments.shard.run_sharded_2d``.
+      carry_out: the resumable *scan-segment* mode (the adaptive-search
+        driver's building block). The scan stage returns
+        ``((states, ds_states), out)`` instead of ``(states, out)`` — the
+        full [B]-batched ``(FedState, ds_state)`` carry comes back as device
+        arrays, so a caller can run ``num_rounds``-sized segments back to
+        back: ``carry = run.init(batch)``, then repeatedly
+        ``carry, out = run.step(carry, batch)``. Because the round step's
+        data key is a pure function of the carried round counter
+        (``make_round_step`` folds ``state.round`` into ``data_key``) and
+        the link/optimizer state ride the carry, k chained segments are
+        bit-for-bit equal to one uninterrupted ``k * num_rounds`` program
+        with the same eval cadence (``tests/test_search.py``).
+      donate_carry: in ``carry_out`` mode, donate the incoming ``(st, ds)``
+        carry buffers to the scan stage so each segment updates in place
+        instead of doubling the [B]-state footprint. Defaults to backend !=
+        "cpu" — the same gate as ``make_run_rounds`` (CPU ignores donation
+        noisily). After ``run.step(carry, ...)`` the passed carry is dead on
+        donating backends; rebind, never reuse.
 
     Returns ``run(batch: CellBatch) -> (states, out)`` where ``states`` is a
     [B]-batched ``FedState`` and ``out["metrics"]`` maps each metric key to a
@@ -335,6 +355,8 @@ def make_batched_run_rounds(loss_fn: Callable, algorithm,
 
         if not do_eval:
             (st, ds), mets = run_span((st, ds), num_rounds)
+            if carry_out:
+                return (st, ds), {"metrics": mets}
             # final all-gather: downstream consumers (host-side evals,
             # rows()) see model-replicated, batch-sharded state
             return _replicate(st), {"metrics": mets}
@@ -357,24 +379,46 @@ def make_batched_run_rounds(loss_fn: Callable, algorithm,
             evals = jnp.concatenate(
                 [evals, eval_fn(carry[0].server, shared)[None]])
         st, ds = carry
+        if carry_out:
+            return (st, ds), {"metrics": mets, "evals": evals}
         return _replicate(st), {"metrics": mets, "evals": evals}
 
     spmd_batch = "batch" if shard_mesh is not None else None
     init_batch = jax.jit(jax.vmap(init_point, in_axes=(0, 0, 0, 0, None, 0),
                                   spmd_axis_name=spmd_batch))
+    # carry_out segments update the [B]-state in place (donated (st, ds))
+    # so chaining rungs never doubles the state footprint; the historical
+    # one-shot mode keeps its undonated signature untouched
+    if donate_carry is None:
+        donate_carry = jax.default_backend() != "cpu"  # CPU ignores donation
+    donate = (0, 1) if (carry_out and donate_carry) else ()
     scan_batch = jax.jit(jax.vmap(scan_point,
                                   in_axes=(0, 0, 0, 0, 0, None, 0),
-                                  spmd_axis_name=spmd_batch))
+                                  spmd_axis_name=spmd_batch),
+                         donate_argnums=donate)
 
-    def run(batch: CellBatch):
-        st, ds = init_batch(batch.keys, batch.p_base, batch.hparams,
-                            batch.data, batch.shared, batch.algo_id)
+    def init(batch: CellBatch):
+        """The batched init stage alone: the [B] (FedState, ds_state) carry."""
+        return init_batch(batch.keys, batch.p_base, batch.hparams,
+                          batch.data, batch.shared, batch.algo_id)
+
+    def step(carry, batch: CellBatch):
+        """One scan dispatch from an existing carry. In ``carry_out`` mode
+        this is the resumable segment: returns ``(next_carry, out)`` and (on
+        donating backends) consumes the passed carry's buffers."""
+        st, ds = carry
         return scan_batch(st, ds, batch.keys["data"], batch.p_base,
                           batch.hparams, batch.shared, batch.algo_id)
 
+    def run(batch: CellBatch):
+        return step(init(batch), batch)
+
+    run.init = init
+    run.step = step
     run.init_batch = init_batch
     run.scan_batch = scan_batch
     run.shard_mesh = shard_mesh
+    run.carry_out = carry_out
     return run
 
 

@@ -79,6 +79,28 @@ def test_single_seed_store_exports_zero_width_ci(tmp_path):
     assert all(int(r[4]) == 1 for r in rows)
 
 
+def test_variable_length_trajectories_pool_with_per_round_counts(tmp_path):
+    """Two same-curve records whose rows have DIFFERENT lengths (an
+    early-pruned search trajectory pooled with a longer one) NaN-pad to the
+    longest row and summarize per round over the seeds that reached it —
+    the old uniform-[E] ``np.stack`` would have crashed outright."""
+    store = ResultsStore(str(tmp_path / "s"))
+    _append(store, seeds=[0], test_acc=[[0.2, 0.4]], eval_rounds=[2, 4])
+    _append(store, seeds=[1], test_acc=[[0.3]], eval_rounds=[2])
+    written = export_curves(store, str(tmp_path / "curves"))
+    assert len(written) == 1
+    header, rows = _read_csv(written[0])
+    assert header == "round,mean,std,ci95,n_seeds"
+    # round 2: both seeds; round 4 (from the LONGER record's eval axis):
+    # only seed 0 — n_seeds drops to 1 and std/ci95 are exactly 0
+    assert [int(r[0]) for r in rows] == [2, 4]
+    assert float(rows[0][1]) == pytest.approx(0.25, abs=1e-6)
+    assert int(rows[0][4]) == 2
+    assert float(rows[1][1]) == pytest.approx(0.4, abs=1e-6)
+    assert float(rows[1][2]) == 0.0 and float(rows[1][3]) == 0.0
+    assert int(rows[1][4]) == 1
+
+
 def test_empty_store_raises_clear_error(tmp_path):
     """An empty/missing store (or an over-narrow filter) is a caller mistake:
     export_curves must say so, naming the store, instead of writing nothing."""

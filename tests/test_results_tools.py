@@ -48,6 +48,36 @@ def test_cell_key_identity():
     assert cell_key(old1) != cell_key(old2)
 
 
+def test_cell_key_search_rows_do_not_collide():
+    """Adaptive-search rows carry a (rung, budget) coordinate: a candidate
+    pruned early and the same hyperparameter point run at another budget are
+    different measurements and must not dedup under merge — while records
+    WITHOUT a search dict (every pre-search row) keep their exact keys."""
+    base, _ = _rec("asha", "fedpbc", [0, 1], "aaa", [[0.1, 0.2], [0.2, 0.3]])
+    pruned = dict(base, search={"rung": 0, "budget_rounds": 3,
+                                "status": "pruned"})
+    finished = dict(base, search={"rung": 1, "budget_rounds": 6,
+                                  "status": "finished"})
+    assert cell_key(pruned) != cell_key(finished)
+    # status alone is bookkeeping, not identity: same budget coordinate
+    # (e.g. "stopped" vs "finished" at the cap) still dedups
+    stopped = dict(finished, search=dict(finished["search"],
+                                         status="stopped"))
+    assert cell_key(stopped) == cell_key(finished)
+    # legacy rows: absent search dict == empty search dict
+    assert cell_key(base) == cell_key(dict(base, search={}))
+
+
+def test_summarize_ignores_nan_padding():
+    from repro.experiments.results import summarize
+
+    s = summarize([0.5, float("nan"), 0.7])
+    assert s["n"] == 2
+    assert s["mean"] == np.mean([0.5, 0.7])
+    # all-NaN degenerates like the empty case
+    assert summarize([float("nan")])["n"] == 0
+
+
 def test_merge_dedupes_by_cell_key_later_store_wins(tmp_path):
     a = ResultsStore(str(tmp_path / "a"))
     rec, arrays = _rec("t1", "fedpbc", [0, 1], "aaa",
